@@ -1,0 +1,214 @@
+"""Benchmark harness: one function per paper table/figure + kernel/e2e perf.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the quantity the
+paper's table reports). Writes the full results to benchmarks/results.json.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run --only segments_table
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = {}
+
+
+def _time_us(fn, *args, reps: int = 5, warmup: int = 2):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_segments_table():
+    """Paper Table I: segment boundaries for n=5, 53-bit precision."""
+    from repro.core import seeds
+
+    t0 = time.perf_counter()
+    table = seeds.compute_segments(5, 53)
+    us = (time.perf_counter() - t0) * 1e6
+    ours = np.round(table.boundaries[1:], 5).tolist()
+    RESULTS["segments_table"] = {
+        "ours": ours, "paper": seeds.PAPER_TABLE_I,
+        "n_segments": table.n_segments,
+        "max_rel_dev": float(np.max(np.abs(
+            (np.array(ours) - np.array(seeds.PAPER_TABLE_I))
+            / np.array(seeds.PAPER_TABLE_I)))),
+    }
+    print(f"segments_table,{us:.1f},n_segments={table.n_segments}"
+          f";b0={ours[0]};paper_b0={seeds.PAPER_TABLE_I[0]}")
+
+
+def bench_taylor_iters():
+    """Paper §3 iteration-count claims + measured error vs n."""
+    from repro.core import seeds, taylor
+    import math
+
+    rows = {}
+    rows["single_segment_iters"] = seeds.iterations_required(1, 2, 53)   # paper: 17
+    rows["two_segment_iters"] = max(
+        seeds.iterations_required(1, math.sqrt(2), 53),
+        seeds.iterations_required(math.sqrt(2), 2, 53))                  # paper: 15
+    table = seeds.compute_segments(5, 53)
+    rng = np.random.default_rng(0)
+    x = rng.uniform(1, 2, 200_000)
+    err_by_n = {}
+    for n in range(0, 6):
+        t0 = time.perf_counter()
+        r = taylor.reciprocal_np(x, table, n_iters=n, schedule="paper")
+        us = (time.perf_counter() - t0) * 1e6
+        err = float(np.max(np.abs(r * x - 1)))
+        err_by_n[n] = {"max_err": err, "bound": table.max_error_bound(n),
+                       "bits": -np.log2(err) if err > 0 else 60}
+        print(f"taylor_n{n},{us:.1f},max_err={err:.3e};bits={err_by_n[n]['bits']:.1f}")
+    RESULTS["taylor_iters"] = {**rows, "err_by_n": err_by_n}
+    print(f"taylor_iters,0,single_seg={rows['single_segment_iters']}(paper=17);"
+          f"two_seg={rows['two_segment_iters']}(paper=15;eq17_gives_10)")
+
+
+def bench_ilm_accuracy():
+    """ILM error vs iterations (paper §4 accuracy/iterations trade)."""
+    from repro.core import ilm
+
+    rng = np.random.default_rng(1)
+    a = rng.integers(1, 2**16, 100_000).astype(np.uint64)
+    b = rng.integers(1, 2**16, 100_000).astype(np.uint64)
+    exact = a * b
+    rows = {}
+    for iters in (1, 2, 3, 4, 6, 8, 16):
+        t0 = time.perf_counter()
+        p = ilm.ilm_mul_np(a, b, iters)
+        us = (time.perf_counter() - t0) * 1e6
+        rel = (exact - p).astype(np.float64) / exact.astype(np.float64)
+        rows[iters] = {"max_rel": float(rel.max()),
+                       "mean_rel": float(rel.mean()),
+                       "exact_frac": float(np.mean(p == exact))}
+        print(f"ilm_iter{iters},{us:.1f},max_rel={rel.max():.2e};"
+              f"exact_frac={rows[iters]['exact_frac']:.3f}")
+    RESULTS["ilm_accuracy"] = rows
+
+
+def bench_powering_hw():
+    """Paper §5 <50% hardware claim + §6 schedule op counts (both schedules)."""
+    from repro.core import powering
+
+    hw = powering.hw_cost()
+    rows = {"area_ratio": hw["area_ratio"], "unit_ratio": hw["unit_ratio"],
+            "op_counts": {}}
+    for n in (3, 5, 7, 9, 17):
+        rows["op_counts"][n] = {
+            "paper": powering.op_counts(n, "paper"),
+            "factored": powering.op_counts(n, "factored"),
+        }
+    RESULTS["powering_hw"] = rows
+    print(f"powering_hw,0,area_ratio={hw['area_ratio']:.3f}(<0.5);"
+          f"n5_paper={rows['op_counts'][5]['paper']};"
+          f"n5_factored={rows['op_counts'][5]['factored']}")
+
+
+def bench_kernel_throughput():
+    """CPU-proxy kernel timings: tsdiv/softmax/rmsnorm vs XLA-native.
+
+    Absolute numbers are CPU-interpret proxies; the TPU claim rides on the
+    dry-run roofline (§Roofline), not these timings. jnp-mode (lowered FMA
+    chains) runs compiled and IS a fair CPU comparison."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import taylor
+    from repro.core.seeds import compute_segments
+
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(0.01, 100, (1024, 1024)).astype(np.float32))
+    t24 = compute_segments(2, 24)
+
+    f_exact = jax.jit(lambda v: 1.0 / v)
+    f_taylor = jax.jit(lambda v: taylor.reciprocal(v, t24))
+    f_taylor_paper = jax.jit(lambda v: taylor.reciprocal(v, t24, schedule="paper"))
+    us_e = _time_us(f_exact, x)
+    us_t = _time_us(f_taylor, x)
+    us_p = _time_us(f_taylor_paper, x)
+    print(f"recip_xla,{us_e:.1f},1Melem")
+    print(f"recip_taylor_factored,{us_t:.1f},ratio={us_t/us_e:.2f}x")
+    print(f"recip_taylor_paper,{us_p:.1f},ratio={us_p/us_e:.2f}x")
+
+    sm_exact = jax.jit(lambda v: jax.nn.softmax(v, -1))
+    from repro.core.division_modes import DivisionConfig, softmax as dmsoft
+    sm_t = jax.jit(lambda v: dmsoft(v, -1, DivisionConfig(mode="taylor")))
+    us_se = _time_us(sm_exact, x)
+    us_st = _time_us(sm_t, x)
+    print(f"softmax_xla,{us_se:.1f},1Melem")
+    print(f"softmax_taylor,{us_st:.1f},ratio={us_st/us_se:.2f}x")
+    RESULTS["kernel_throughput"] = {
+        "recip_xla_us": us_e, "recip_taylor_us": us_t,
+        "recip_taylor_paper_us": us_p,
+        "softmax_xla_us": us_se, "softmax_taylor_us": us_st,
+    }
+
+
+def bench_e2e_softdiv():
+    """End-to-end: smoke LM forward under exact vs taylor vs ilm division."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core.division_modes import DivisionConfig
+    from repro.models import forward, init_params
+    from repro.train.step import loss_fn
+
+    cfg = get_smoke_config("paper_fpdiv")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    rows = {}
+    base_logits = None
+    for mode in ("exact", "taylor", "ilm"):
+        c = dataclasses.replace(cfg, division=DivisionConfig(mode=mode))
+        f = jax.jit(lambda p, b: loss_fn(c, p, b)[0])
+        us = _time_us(f, params, batch, reps=3, warmup=1)
+        loss = float(f(params, batch))
+        logits, _, _ = forward(c, params, tokens=toks, mode="train")
+        if base_logits is None:
+            base_logits = logits
+            dev = 0.0
+        else:
+            dev = float(jnp.max(jnp.abs(logits - base_logits)))
+        rows[mode] = {"loss": loss, "us": us, "logit_dev_vs_exact": dev}
+        print(f"e2e_{mode},{us:.1f},loss={loss:.4f};logit_dev={dev:.2e}")
+    RESULTS["e2e_softdiv"] = rows
+
+
+BENCHES = {
+    "segments_table": bench_segments_table,
+    "taylor_iters": bench_taylor_iters,
+    "ilm_accuracy": bench_ilm_accuracy,
+    "powering_hw": bench_powering_hw,
+    "kernel_throughput": bench_kernel_throughput,
+    "e2e_softdiv": bench_e2e_softdiv,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+    out = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(out, "w") as f:
+        json.dump(RESULTS, f, indent=1, default=str)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Inject generated roofline tables into EXPERIMENTS.md (between markers).
+
+  PYTHONPATH=src python experiments/finalize_report.py
+"""
+import json
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.report import load_cells, table  # noqa: E402
+
+EXP = "EXPERIMENTS.md"
+
+
+def variant_table(cells, arch, shape, variants):
+    rows = {c["variant"]: c for c in cells
+            if c["arch"] == arch and c["shape"] == shape
+            and c["mesh"] == "single"}
+    out = ["| variant | t_compute | t_memory | t_collective | bound | t_step | MFU |",
+           "|---|---|---|---|---|---|---|"]
+    for v in variants:
+        c = rows.get(v)
+        if not c:
+            continue
+        r = c["roofline"]
+        out.append(
+            f"| `{v}` | {r['t_compute']*1e3:.1f}ms | {r['t_memory']*1e3:.1f}ms "
+            f"| {r['t_collective']*1e3:.1f}ms | {r['bound']} "
+            f"| {r['t_step']*1e3:.1f}ms | {r['mfu']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    cells = load_cells("experiments/dryrun")
+    single = table(cells, "single", "base")
+    multi = table(cells, "multi", "base")
+
+    dryrun_block = (
+        "### Single-pod (data=16, model=16), 256 chips — baseline variant\n\n"
+        + single +
+        "\n\n### Multi-pod (pod=2, data=16, model=16), 512 chips — baseline\n\n"
+        + multi +
+        "\n\nNotes: `fits` checks params+opt+temps against 16 GB/chip. "
+        "Baseline **NO** cells fall into two classes, both engineered away in "
+        "§Perf: (1) decode at TP16 replicates the KV cache per model rank "
+        "(fixed by TP<=kv_heads: the tp4/tp8 decode variants fit and run at "
+        "the HBM roofline); (2) CPU-backend `temp` accounting holds every "
+        "loop iteration's buffers live simultaneously — argument bytes "
+        "(params+optimizer, exact) fit everywhere, including Jamba-398B at "
+        "8.8 GiB/device. MFU is meaningless for decode cells (memory-bound "
+        "by construction); their roofline fraction is t_memory/t_step.\n")
+
+    hillclimb_tables = []
+    for arch, shape, variants, title in [
+        ("llama3_8b", "train_4k",
+         ["base", "exact_div", "div_paper_n5", "tp8", "tp4", "tp4+seq_shard",
+          "tp4+flash", "tp4+flash+optbf16",
+          "tp4+flash+no_remat+optbf16+mb2"],
+         "Cell A: llama3_8b × train_4k"),
+        ("llama3_8b", "decode_32k",
+         ["base", "kvseq", "tp4+flash", "tp8+kvseq+flash"],
+         "Cell B: llama3_8b × decode_32k"),
+        ("deepseek_moe_16b", "train_4k",
+         ["base", "sort_dispatch", "local_dispatch",
+          "local_dispatch+ep_tp+tp4+flash+no_remat",
+          "local_dispatch+tp4+flash+no_remat+optbf16"],
+         "Cell C: deepseek_moe_16b × train_4k"),
+        ("jamba_1_5_large", "train_4k",
+         ["base", "sort_dispatch+mb4", "local_dispatch+mb4"],
+         "Bonus: jamba_1_5_large × train_4k"),
+        ("moonshot_v1_16b_a3b", "train_4k",
+         ["base", "local_dispatch+ep_tp+tp4",
+          "local_dispatch+tp4+flash+optbf16"],
+         "Bonus: moonshot × train_4k"),
+    ]:
+        hillclimb_tables.append(f"### {title} (measured variants)\n\n"
+                                + variant_table(cells, arch, shape, variants))
+    perf_block = "\n\n".join(hillclimb_tables)
+
+    with open(EXP) as f:
+        text = f.read()
+    text = re.sub(r"<!-- DRYRUN-TABLES -->.*?(?=## §Roofline)",
+                  "<!-- DRYRUN-TABLES -->\n\n" + dryrun_block + "\n",
+                  text, flags=re.S)
+    # idempotent: replace the whole §Roofline section body
+    text = re.sub(
+        r"## §Roofline.*?## §Perf",
+        "## §Roofline\n\n<!-- ROOFLINE-TABLE -->\n\n"
+        "The three terms per cell are in the §Dry-run tables above "
+        "(t_compute / t_memory / t_collective columns, dominant term "
+        "bolded); below are the measured hillclimb variants referenced by "
+        "§Perf.\n\n" + perf_block + "\n\n## §Perf",
+        text, flags=re.S)
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

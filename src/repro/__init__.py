@@ -1,0 +1,15 @@
+"""repro: a production-grade JAX/TPU framework built around the paper
+"A Floating Point Division Unit based on Taylor-Series Expansion and the
+Iterative Logarithmic Multiplier" (Karani et al., 2017).
+
+Public API:
+  repro.core        — the paper's arithmetic (seeds, taylor, ilm, powering)
+  repro.kernels     — Pallas TPU kernels (+ jnp oracles)
+  repro.models      — transformer/SSM/MoE model zoo
+  repro.configs     — the 10 assigned architectures + paper demo config
+  repro.train       — fault-tolerant distributed training
+  repro.serving     — prefill/decode engine
+  repro.launch      — production-mesh dry-run + roofline analysis
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+"""Arch configs: one module per assigned architecture + the paper demo config."""
+from .base import (ARCH_IDS, LM_SHAPES, ModelConfig, ShapeConfig, get_config,
+                   get_smoke_config, long_context_ok, rules_for, shapes_for)
+
+__all__ = [
+    "ARCH_IDS", "LM_SHAPES", "ModelConfig", "ShapeConfig", "get_config",
+    "get_smoke_config", "long_context_ok", "rules_for", "shapes_for",
+]

@@ -1,0 +1,37 @@
+"""gemma3-12b [dense]: 48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144.
+
+5:1 local:global attention (sliding window 1024, 1 global layer per 6),
+head_dim 256 (gemma's q dim 4096 != d_model), tied embeddings, 128k-class
+context via the mostly-local pattern => long_500k runs (decode against W-sized
+ring caches on 40 of 48 layers).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16, n_kv_heads=8, head_dim=256,
+    d_ff=15_360,
+    vocab=262_144,
+    sliding_window=1024,
+    global_every=6,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    train_microbatch_size=2,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="gemma3-smoke",
+    family="dense",
+    n_layers=6,
+    d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128,
+    vocab=512,
+    sliding_window=16,
+    global_every=3,
+    tie_embeddings=True,
+    remat=False,
+)

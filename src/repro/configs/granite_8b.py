@@ -1,0 +1,28 @@
+"""granite-8b [dense]: 36L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=49152.
+
+Llama-architecture code model (arXiv:2405.04324). kv_heads=8 < model axis 16
+=> KV replicated over the model axis (divisibility drop), Megatron-style.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14_336,
+    vocab=49_152,
+    train_microbatch_size=4,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="granite-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128,
+    vocab=256,
+    remat=False,
+)

@@ -1,0 +1,32 @@
+"""llava-next-mistral-7b [vlm]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+
+Backbone only (hf:llava-hf/llava-v1.6-mistral-7b-hf): the anyres vision tower
+is a STUB — input_specs() provides precomputed patch+text embeddings
+(B, S, d_model), per the assignment. embed_inputs=True => no input embedding
+table; the untied lm_head maps d_model -> 32000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14_336,
+    vocab=32_000,
+    embed_inputs=True,
+    train_microbatch_size=4,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="llava-smoke",
+    family="vlm",
+    n_layers=3,
+    d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128,
+    vocab=256,
+    embed_inputs=True,
+    remat=False,
+)

@@ -1,0 +1,33 @@
+"""paper-fpdiv: the paper's own demo config — a ~124M dense LM whose every
+division site (attention softmax, RMSNorm, Adam) runs the Taylor-series
+division unit at paper-faithful settings (n=5, 53-bit table, 'paper'
+powering-unit schedule). Used by examples/ and the e2e benchmark.
+"""
+from repro.configs.base import ModelConfig
+from repro.core.division_modes import DivisionConfig
+
+CONFIG = ModelConfig(
+    name="paper-fpdiv",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=2048,
+    vocab=32_000,
+    division=DivisionConfig(mode="taylor", precision_bits=24, n_iters=2,
+                            schedule="paper"),
+    train_microbatch_size=16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="paper-fpdiv-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128,
+    vocab=256,
+    division=DivisionConfig(mode="taylor", precision_bits=24, n_iters=2,
+                            schedule="paper"),
+    remat=False,
+)

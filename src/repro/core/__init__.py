@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — Taylor-series division with PWL seeds and
+the Iterative Logarithmic Multiplier — as composable JAX modules."""
+from . import ilm, powering, seeds, taylor
+from .division_modes import EXACT, TAYLOR, DivisionConfig, div, recip, rsqrt, softmax
+from .seeds import SeedTable, compute_segments
+
+__all__ = [
+    "ilm", "powering", "seeds", "taylor",
+    "DivisionConfig", "EXACT", "TAYLOR",
+    "div", "recip", "rsqrt", "softmax",
+    "SeedTable", "compute_segments",
+]

@@ -1,0 +1,147 @@
+"""Framework-wide division dispatch — the paper's unit as a first-class feature.
+
+Every division site in the framework (attention softmax, RMSNorm rsqrt, MoE
+router normalization, Adam update, loss normalization) calls through here, so
+the divider implementation is one config knob:
+
+  * ``exact``         — native XLA divide/rsqrt (the baseline the paper compares
+                        against: "a full-precision hardware divider").
+  * ``taylor``        — paper's unit in pure jnp (PWL seed + series). This is
+                        what the dry-run lowers: division becomes FMA chains.
+  * ``taylor_pallas`` — fused Pallas TPU kernels (kernels/). CPU runs them in
+                        interpret mode; TPU gets real VMEM-tiled kernels.
+  * ``ilm``           — bit-faithful emulation with 16-bit ILM mantissa
+                        arithmetic (tests/benchmarks only; slow by design).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from . import taylor
+from .seeds import compute_segments, rsqrt_seed_table
+
+__all__ = ["DivisionConfig", "recip", "div", "rsqrt", "softmax", "EXACT", "TAYLOR"]
+
+MODES = ("exact", "taylor", "taylor_pallas", "ilm")
+
+
+@dataclasses.dataclass(frozen=True)
+class DivisionConfig:
+    """Precision dial per paper eq. 17: (n_iters, precision_bits) -> segments."""
+
+    mode: str = "taylor"
+    precision_bits: int = 24      # f32 mantissa target; bf16 would need only 8
+    n_iters: int = 2              # paper: n=5 @ 53 bits; n=2 suffices @ 24 bits
+    schedule: str = "factored"    # 'paper' | 'factored'
+    rsqrt_newton: int = 2
+    rsqrt_segments: int = 16
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+
+    @property
+    def table(self):
+        return compute_segments(self.n_iters, self.precision_bits)
+
+    @property
+    def rtable(self):
+        return rsqrt_seed_table(self.rsqrt_segments)
+
+
+EXACT = DivisionConfig(mode="exact")
+TAYLOR = DivisionConfig(mode="taylor")
+
+
+def recip(x, cfg: DivisionConfig = TAYLOR):
+
+    if cfg.mode == "exact":
+        return 1.0 / x
+    if cfg.mode in ("taylor", "taylor_pallas"):
+        if cfg.mode == "taylor_pallas":
+            from repro.kernels import ops as kops
+
+            if kops.pallas_applicable(x):
+                return kops.tsdiv_recip(x, n_iters=cfg.n_iters,
+                                        precision_bits=cfg.precision_bits)
+        return taylor.reciprocal(x, cfg.table, schedule=cfg.schedule)
+    if cfg.mode == "ilm":
+        return _recip_ilm_jnp(x, cfg)
+    raise ValueError(cfg.mode)
+
+
+def div(a, b, cfg: DivisionConfig = TAYLOR):
+    if cfg.mode == "exact":
+        return a / b
+    return a * recip(b, cfg)
+
+
+def rsqrt(x, cfg: DivisionConfig = TAYLOR):
+    import jax
+
+    if cfg.mode == "exact":
+        return jax.lax.rsqrt(x)
+    return taylor.rsqrt(x, cfg.rtable, newton_iters=cfg.rsqrt_newton)
+
+
+def softmax(x, axis: int = -1, cfg: DivisionConfig = TAYLOR, where=None):
+    """Numerically-stable softmax whose 1/sum goes through the division unit."""
+    import jax
+    import jax.numpy as jnp
+
+    xmax = jnp.max(x, axis=axis, keepdims=True, where=where,
+                   initial=-jnp.inf if where is not None else None)
+    xmax = jnp.where(jnp.isfinite(xmax), xmax, 0.0)
+    ex = jnp.exp(x - jax.lax.stop_gradient(xmax))
+    if where is not None:
+        ex = jnp.where(where, ex, 0.0)
+    s = jnp.sum(ex, axis=axis, keepdims=True)
+    return ex / s if cfg.mode == "exact" else ex * recip(s, cfg)
+
+
+def _recip_ilm_jnp(x, cfg: DivisionConfig):
+    """Reciprocal with every multiply routed through the 16-bit jnp ILM.
+
+    Mantissas are quantized to 12 bits so ILM products fit uint32 lanes; the
+    result carries ~12-bit precision — the "programmable accuracy" end of the
+    paper's dial. Tests/benchmarks only.
+    """
+    import jax.numpy as jnp
+
+    from . import ilm as ilm_mod
+    from . import powering
+
+    mant_bits = 12
+    iters = 12
+    table = compute_segments(min(cfg.n_iters, 5), min(cfg.precision_bits, 12))
+
+    def fpmul(a, b):
+        fa, ea = jnp.frexp(jnp.abs(a))
+        fb, eb = jnp.frexp(jnp.abs(b))
+        scale = 1 << (mant_bits - 1)
+        ma = jnp.round(fa * 2 * scale).astype(jnp.uint32)
+        mb = jnp.round(fb * 2 * scale).astype(jnp.uint32)
+        p = ilm_mod.ilm_mul(ma, mb, iters).astype(jnp.float32)
+        r = jnp.ldexp(p / (4.0 * scale * scale), (ea - 1) + (eb - 1) + 2)
+        return r * jnp.sign(a) * jnp.sign(b)
+
+    xf = x.astype(jnp.float32)
+    frac, e = jnp.frexp(jnp.abs(xf))
+    man = frac * 2.0
+    inner = jnp.asarray(table.inner_boundaries, jnp.float32)
+    idx = jnp.sum((man[..., None] >= inner).astype(jnp.int32), axis=-1)
+    y0 = (jnp.take(jnp.asarray(table.slopes, jnp.float32), idx) * man
+          + jnp.take(jnp.asarray(table.intercepts, jnp.float32), idx))
+    m = 1.0 - fpmul(man, y0)
+    n = table.n_iters
+    powers = powering.eval_powers(m, n, mul=fpmul, square=lambda a: fpmul(a, a))
+    acc = jnp.ones_like(m) + m
+    for k in range(2, n + 1):
+        acc = acc + powers[k]
+    rman = fpmul(y0, acc)
+    r = jnp.ldexp(rman, 1 - e) * jnp.sign(xf)
+    r = jnp.where(xf == 0, jnp.inf * jnp.sign(xf), r)
+    return r.astype(x.dtype)

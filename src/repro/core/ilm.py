@@ -1,0 +1,172 @@
+"""Iterative Logarithmic Multiplier (paper §4) and squaring unit (paper §5),
+bit-exact on integer mantissas.
+
+ILM (Babic/Avramovic/Bulic, paper eq. 23-27):
+    N1*N2 = 2^(k1+k2) + 2^k2*(N1-2^k1) + 2^k1*(N2-2^k2) + (N1-2^k1)(N2-2^k2)
+The first three terms are P_approx; the last is the error E, itself a product
+of the leading-one-cleared operands -> iterate. Each iteration clears one
+leading bit from *each* operand, so ``iters >= min(popcount(a), popcount(b))``
+gives the exact product.
+
+Squarer (paper eq. 28):
+    N^2 = 4^k + 2^(k+1)*(N-2^k) + (N-2^k)^2
+one operand path only (the <50%-hardware claim, see powering.hw_cost).
+
+Two twins again: numpy (uint64; models the paper's full 24/53-bit mantissas)
+and jnp (uint32; operand width <= 16 bits so products fit 32 bits — the width
+used by the Pallas kernel and the framework's "ilm" emulation mode).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "floor_log2_np", "ilm_mul_np", "ilm_square_np",
+    "floor_log2", "ilm_mul", "ilm_square",
+    "fp_mul_ilm_np", "fp_recip_ilm_np", "exact_iters_bound",
+]
+
+
+def exact_iters_bound(bits: int) -> int:
+    """Iterations guaranteeing exactness for operands of this bit width."""
+    return bits
+
+
+# ---------------------------------------------------------------- numpy twin
+
+def floor_log2_np(x: np.ndarray) -> np.ndarray:
+    """floor(log2(x)) for x > 0 (the priority encoder). 0 maps to 0."""
+    x = np.asarray(x, np.uint64)
+    out = np.zeros_like(x, np.int64)
+    v = x.copy()
+    for s in (32, 16, 8, 4, 2, 1):
+        hit = v >= np.uint64(1 << s)
+        out = np.where(hit, out + s, out)
+        v = np.where(hit, v >> np.uint64(s), v)
+    return out
+
+
+def ilm_mul_np(a, b, iters: int) -> np.ndarray:
+    """ILM product with ``iters`` error-correction iterations (numpy, uint64)."""
+    a = np.asarray(a, np.uint64)
+    b = np.asarray(b, np.uint64)
+    acc = np.zeros(np.broadcast(a, b).shape, np.uint64)
+    for _ in range(iters):
+        valid = (a > 0) & (b > 0)
+        k1 = floor_log2_np(np.maximum(a, 1)).astype(np.uint64)
+        k2 = floor_log2_np(np.maximum(b, 1)).astype(np.uint64)
+        ra = a - (np.uint64(1) << k1)          # LOD residue: N1 - 2^k1
+        rb = b - (np.uint64(1) << k2)
+        p = (np.uint64(1) << (k1 + k2)) + (ra << k2) + (rb << k1)
+        acc = np.where(valid, acc + p, acc)
+        a = np.where(valid, ra, a)
+        b = np.where(valid, rb, b)
+    return acc
+
+
+def ilm_square_np(a, iters: int) -> np.ndarray:
+    """Squaring unit: iterates N^2 = 4^k + 2^(k+1)(N-2^k) + (N-2^k)^2."""
+    a = np.asarray(a, np.uint64)
+    acc = np.zeros_like(a)
+    for _ in range(iters):
+        valid = a > 0
+        k = floor_log2_np(np.maximum(a, 1)).astype(np.uint64)
+        r = a - (np.uint64(1) << k)
+        p = (np.uint64(1) << (np.uint64(2) * k)) + (r << (k + np.uint64(1)))
+        acc = np.where(valid, acc + p, acc)
+        a = np.where(valid, r, a)
+    return acc
+
+
+# ------------------------------------------------------------------ jnp twin
+
+def floor_log2(x):
+    """floor(log2(x)) on uint32 lanes via bit-smear + population count."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    v = x.astype(jnp.uint32)
+    for s in (1, 2, 4, 8, 16):
+        v = v | (v >> s)
+    return lax.population_count(v).astype(jnp.int32) - 1
+
+
+def ilm_mul(a, b, iters: int):
+    """ILM product (jnp, uint32). Operands must be < 2^16 for exact headroom."""
+    import jax.numpy as jnp
+
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    acc = jnp.zeros(jnp.broadcast_shapes(a.shape, b.shape), jnp.uint32)
+    one = jnp.uint32(1)
+    for _ in range(iters):
+        valid = (a > 0) & (b > 0)
+        k1 = jnp.maximum(floor_log2(jnp.maximum(a, 1)), 0).astype(jnp.uint32)
+        k2 = jnp.maximum(floor_log2(jnp.maximum(b, 1)), 0).astype(jnp.uint32)
+        ra = a - (one << k1)
+        rb = b - (one << k2)
+        p = (one << (k1 + k2)) + (ra << k2) + (rb << k1)
+        acc = jnp.where(valid, acc + p, acc)
+        a = jnp.where(valid, ra, a)
+        b = jnp.where(valid, rb, b)
+    return acc
+
+
+def ilm_square(a, iters: int):
+    """Squaring unit (jnp, uint32). Operand < 2^16."""
+    import jax.numpy as jnp
+
+    a = a.astype(jnp.uint32)
+    acc = jnp.zeros_like(a)
+    one = jnp.uint32(1)
+    for _ in range(iters):
+        valid = a > 0
+        k = jnp.maximum(floor_log2(jnp.maximum(a, 1)), 0).astype(jnp.uint32)
+        r = a - (one << k)
+        p = (one << (k + k)) + (r << (k + one))
+        acc = jnp.where(valid, acc + p, acc)
+        a = jnp.where(valid, r, a)
+    return acc
+
+
+# ------------------------------------- floating-point emulation (numpy oracle)
+
+def fp_mul_ilm_np(x, y, *, iters: int, mant_bits: int = 24) -> np.ndarray:
+    """FP multiply through the ILM on quantized mantissas (hardware emulation)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    fx, ex = np.frexp(np.abs(x))
+    fy, ey = np.frexp(np.abs(y))
+    scale = 1 << (mant_bits - 1)
+    mx = np.round(fx * 2 * scale).astype(np.uint64)   # in [2^(mb-1), 2^mb]
+    my = np.round(fy * 2 * scale).astype(np.uint64)
+    p = ilm_mul_np(mx, my, iters).astype(np.float64)
+    r = np.ldexp(p / (4.0 * scale * scale), (ex - 1) + (ey - 1) + 2)
+    return r * np.sign(x) * np.sign(y)
+
+
+def fp_recip_ilm_np(x, *, table=None, iters_mul: int = 24, n_terms: int = 5) -> np.ndarray:
+    """Full §7 system emulation: PWL seed + Taylor series, all multiplies via ILM.
+
+    This is the bit-faithful model of the paper's Fig. 7 datapath: the powering
+    unit evaluates the series with the ILM multiplier/squarer; the final
+    a*b^-1 multiply also goes through the ILM.
+    """
+    from .seeds import compute_segments
+    from . import powering
+
+    table = table or compute_segments(5, 53)
+    x = np.asarray(x, np.float64)
+    frac, e = np.frexp(np.abs(x))
+    man = frac * 2.0
+    y0 = table.seed(man)
+    mul = lambda a, b: fp_mul_ilm_np(a, b, iters=iters_mul)
+    m = 1.0 - mul(man, y0)
+    powers = powering.eval_powers(
+        m, n_terms, mul=mul,
+        square=lambda a: fp_mul_ilm_np(a, a, iters=iters_mul))
+    acc = np.ones_like(m) + (m if n_terms >= 1 else 0.0)
+    for k in range(2, n_terms + 1):
+        acc = acc + powers[k]
+    rman = mul(y0, acc)
+    return np.ldexp(rman, 1 - e) * np.sign(x)

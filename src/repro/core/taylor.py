@@ -1,0 +1,158 @@
+"""Taylor-series reciprocal / divide / rsqrt (paper §2-3 + §6 schedules).
+
+Two twin implementations share one body, parameterized by the array module:
+
+  * ``reciprocal_np`` — float64 numpy oracle. Used to validate the paper's
+    53-bit claims (f64 precision without flipping jax_enable_x64).
+  * ``reciprocal`` — jnp, f32 compute (bf16 in/out supported). This is the
+    production path that models call through ``core.division_modes``.
+
+Evaluation schedules for  acc = sum_{k=0}^{n} m^k  (m = 1 - x*y0):
+
+  * ``paper``    — §6 powering unit: per cycle one odd power by multiply
+                   (x * x^k) and one even power by square ((x^{k/2+1})^2).
+                   Faithful term count: exactly n+1 terms.
+  * ``factored`` — beyond-paper:  prod_{i<j} (1 + m^(2^i)) = sum_{k<2^j} m^k
+                   with j = ceil(log2(n+1)). Squarings only, log-depth; covers
+                   *at least* n+1 terms (never fewer — strictly more accurate
+                   at equal-or-lower op count). TPU-preferred.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import numpy as np
+
+from .seeds import SeedTable, compute_segments, rsqrt_seed_table
+from . import powering
+
+__all__ = [
+    "reciprocal", "reciprocal_np", "divide", "divide_np", "rsqrt", "rsqrt_np",
+    "default_table",
+]
+
+
+def default_table(precision_bits: int = 24, n_iters: int = 2) -> SeedTable:
+    """Default seed table: (n, precision) -> segments. f32 default: n=2, 24 bits."""
+    return compute_segments(n_iters, precision_bits)
+
+
+def _series_acc(xp, m, n: int, schedule: str):
+    """sum_{k=0}^{n'} m^k with n' >= n, per the requested schedule."""
+    one = xp.ones_like(m)
+    if n <= 0:
+        return one
+    if schedule == "factored":
+        j = max(1, math.ceil(math.log2(n + 1)))
+        acc = one + m
+        t = m * m
+        for _ in range(j - 1):
+            acc = acc * (one + t)
+            t = t * t
+        return acc
+    if schedule == "paper":
+        powers = powering.eval_powers(m, n, mul=lambda a, b: a * b, square=lambda a: a * a)
+        acc = one + m if n >= 1 else one
+        for k in range(2, n + 1):
+            acc = acc + powers[k]
+        return acc
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def _reciprocal_mantissa(xp, man, table: SeedTable, n: int, schedule: str):
+    """1/man for man in [1, 2): PWL seed + Taylor refinement. No edge cases."""
+    inner = table.inner_boundaries.astype(man.dtype)
+    slopes = table.slopes.astype(man.dtype)
+    intercepts = table.intercepts.astype(man.dtype)
+    if len(inner):
+        idx = xp.sum((man[..., None] >= inner).astype(np.int32), axis=-1)
+        y0 = xp.take(slopes, idx) * man + xp.take(intercepts, idx)
+    else:
+        y0 = slopes[0] * man + intercepts[0]
+    m = 1.0 - man * y0
+    return y0 * _series_acc(xp, m, n, schedule)
+
+
+def _reciprocal_impl(xp, x, table: SeedTable, n: int, schedule: str):
+    """Full FP reciprocal: sign/exponent unpack, mantissa recip, repack, edges."""
+    sign = xp.sign(x)
+    ax = xp.abs(x)
+    frac, e = xp.frexp(ax)          # ax = frac * 2^e, frac in [0.5, 1)
+    man = frac * 2.0                # in [1, 2); exponent is (e - 1)
+    rman = _reciprocal_mantissa(xp, man, table, n, schedule)  # in (0.5, 1]
+    r = xp.ldexp(rman, 1 - e) * sign
+    # Edge semantics match a hardware unit: 0 -> +-inf, inf -> +-0, nan -> nan.
+    r = xp.where(ax == 0, xp.copysign(xp.asarray(np.inf, r.dtype), x), r)
+    r = xp.where(xp.isinf(ax), xp.copysign(xp.asarray(0.0, r.dtype), x), r)
+    r = xp.where(xp.isnan(x), xp.asarray(np.nan, r.dtype), r)
+    return r
+
+
+# ---------------------------------------------------------------- numpy oracle
+
+def reciprocal_np(x, table: SeedTable | None = None, *, n_iters: int | None = None,
+                  schedule: str = "paper") -> np.ndarray:
+    table = table or compute_segments(5, 53)
+    n = table.n_iters if n_iters is None else n_iters
+    x = np.asarray(x, np.float64)
+    return _reciprocal_impl(np, x, table, n, schedule)
+
+
+def divide_np(a, b, table: SeedTable | None = None, **kw) -> np.ndarray:
+    return np.asarray(a, np.float64) * reciprocal_np(b, table, **kw)
+
+
+def rsqrt_np(x, table: SeedTable | None = None, *, newton_iters: int = 3) -> np.ndarray:
+    table = table or rsqrt_seed_table()
+    x = np.asarray(x, np.float64)
+    return _rsqrt_impl(np, x, table, newton_iters)
+
+
+# ------------------------------------------------------------------- jnp path
+
+def reciprocal(x, table: SeedTable | None = None, *, n_iters: int | None = None,
+               schedule: str = "factored"):
+    """Taylor-series reciprocal in JAX. f32 compute; bf16/f16 pass through f32."""
+    import jax.numpy as jnp
+
+    table = table or default_table()
+    n = table.n_iters if n_iters is None else n_iters
+    out_dtype = x.dtype
+    xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
+    r = _reciprocal_impl(jnp, xf, table, n, schedule)
+    return r.astype(out_dtype)
+
+
+def divide(a, b, table: SeedTable | None = None, **kw):
+    return a * reciprocal(b, table, **kw)
+
+
+def _rsqrt_impl(xp, x, table: SeedTable, newton_iters: int):
+    """1/sqrt(x): even/odd exponent split onto [0.5, 2), PWL seed, Newton."""
+    frac, e = xp.frexp(x)           # x = frac * 2^e, frac in [0.5, 1)
+    # s = floor(e/2); u = frac * 2^(e - 2s) in [0.5, 2);  rsqrt(x) = rsqrt(u) * 2^-s
+    s = e >> 1
+    u = xp.ldexp(frac, e - 2 * s)
+    inner = table.inner_boundaries.astype(u.dtype)
+    idx = xp.sum((u[..., None] >= inner).astype(np.int32), axis=-1)
+    y = xp.take(table.slopes.astype(u.dtype), idx) * u + xp.take(
+        table.intercepts.astype(u.dtype), idx)
+    for _ in range(newton_iters):
+        y = y * (1.5 - 0.5 * u * y * y)
+    r = xp.ldexp(y, -s)
+    r = xp.where(x == 0, xp.asarray(np.inf, r.dtype), r)
+    r = xp.where(x < 0, xp.asarray(np.nan, r.dtype), r)
+    r = xp.where(xp.isinf(x), xp.asarray(0.0, r.dtype), r)
+    r = xp.where(xp.isnan(x), xp.asarray(np.nan, r.dtype), r)
+    return r
+
+
+def rsqrt(x, table: SeedTable | None = None, *, newton_iters: int = 2):
+    import jax.numpy as jnp
+
+    table = table or rsqrt_seed_table()
+    out_dtype = x.dtype
+    xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
+    r = _rsqrt_impl(jnp, xf, table, newton_iters)
+    return r.astype(out_dtype)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's division unit and its fusion sites.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ref.py (pure-jnp
+oracles), ops.py (shape-generic jit wrappers). CPU validates via interpret
+mode; TPU is the compilation target.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,103 @@
+"""Shared kernel-body math: traceable inside Pallas kernels and in ref oracles.
+
+Everything here is straight-line jnp on values already resident in VMEM —
+no gathers (the PWL "ROM" is a compare/select ladder over compile-time
+constants, which vectorizes perfectly on the VPU), no data-dependent shapes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.seeds import SeedTable, compute_segments, rsqrt_seed_table
+
+F32_SIGN = np.uint32(0x8000_0000)
+F32_EXP_MASK = np.uint32(0x7F80_0000)
+F32_MAN_MASK = np.uint32(0x007F_FFFF)
+F32_ONE_BITS = np.uint32(0x3F80_0000)
+
+
+def seed_ladder(man: jax.Array, table: SeedTable) -> jax.Array:
+    """PWL seed via compare/select ladder (the hardware LUT, vectorized).
+
+    man must lie in [table.boundaries[0], table.boundaries[-1])."""
+    slopes = table.slopes.astype(np.float32)
+    intercepts = table.intercepts.astype(np.float32)
+    y0 = slopes[0] * man + intercepts[0]
+    for i, b in enumerate(table.inner_boundaries.astype(np.float32)):
+        y0 = jnp.where(man >= b, slopes[i + 1] * man + intercepts[i + 1], y0)
+    return y0
+
+
+def series_refine(y0: jax.Array, man: jax.Array, n: int, schedule: str) -> jax.Array:
+    """y0 * sum m^k with m = 1 - man*y0 (paper eq. 11), unrolled at trace time."""
+    m = 1.0 - man * y0
+    if n <= 0:
+        return y0
+    if schedule == "factored":
+        import math
+        j = max(1, math.ceil(math.log2(n + 1)))
+        acc = 1.0 + m
+        t = m * m
+        for _ in range(j - 1):
+            acc = acc * (1.0 + t)
+            t = t * t
+        return y0 * acc
+    # paper schedule: odd by multiply, even by square
+    from repro.core import powering
+    powers = powering.eval_powers(m, n, mul=lambda a, b: a * b, square=lambda a: a * a)
+    acc = 1.0 + m
+    for k in range(2, n + 1):
+        acc = acc + powers[k]
+    return y0 * acc
+
+
+def recip_f32_bits(x: jax.Array, table: SeedTable, n: int, schedule: str) -> jax.Array:
+    """Full f32 reciprocal with explicit bit-level unpack/repack.
+
+    This is the hardware datapath: sign/exponent/mantissa split, PWL seed on
+    the mantissa in [1,2), series refinement, exponent negation by biased-
+    exponent arithmetic. Denormal inputs flush to +-inf (treated as zero);
+    reciprocals that would be denormal flush to +-0 — standard FTZ semantics
+    of fast hardware dividers.
+    """
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits & F32_SIGN
+    exp = (bits >> 23) & jnp.uint32(0xFF)
+    man_bits = bits & F32_MAN_MASK
+    man = jax.lax.bitcast_convert_type(man_bits | F32_ONE_BITS, jnp.float32)
+    rman = series_refine(seed_ladder(man, table), man, n, schedule)  # (0.5, 1]
+    # 2^-(exp-127) has biased exponent 254-exp; clamp into the normal range.
+    scale_exp = jnp.clip(jnp.uint32(254) - exp, jnp.uint32(0), jnp.uint32(254))
+    scale = jax.lax.bitcast_convert_type(scale_exp << 23, jnp.float32)
+    r = rman * scale
+    # Edges: zero/denormal -> inf; inf -> 0; nan -> nan.
+    r = jnp.where(exp == 0, jnp.float32(np.inf), r)
+    r = jnp.where((exp == 255) & (man_bits == 0), jnp.float32(0.0), r)
+    rbits = jax.lax.bitcast_convert_type(r, jnp.uint32) | sign
+    r = jax.lax.bitcast_convert_type(rbits, jnp.float32)
+    return jnp.where((exp == 255) & (man_bits != 0), jnp.float32(np.nan), r)
+
+
+def rsqrt_f32(x: jax.Array, table: SeedTable, newton_iters: int) -> jax.Array:
+    """rsqrt for strictly-positive x (norm denominators): PWL seed + Newton."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    exp = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+    man = jax.lax.bitcast_convert_type(
+        (bits & F32_MAN_MASK) | F32_ONE_BITS, jnp.float32)
+    # x = man * 2^exp; with s = floor(exp/2): u = man * 2^(exp-2s) in [1, 4) —
+    # shift the seed domain [0.5, 2) by scaling u by 1/2 and result by sqrt(2).
+    s = exp >> 1  # floor division (arithmetic shift)
+    odd = exp - 2 * s  # 0 or 1
+    u = jnp.where(odd == 1, man * 2.0, man) * 0.5  # in [0.5, 2)
+    y = seed_ladder(u, table)
+    for _ in range(newton_iters):
+        y = y * (1.5 - 0.5 * u * y * y)
+    # rsqrt(x) = rsqrt(2u * 2^(2s + odd - 1)) ... assembled as y * 2^-(s)/sqrt(2)*...
+    # We defined u = man' / 2 with man' in [1,4), x = man' * 2^(2s).
+    # rsqrt(x) = rsqrt(2u) * 2^-s = y / sqrt(2) * 2^-s.
+    inv_sqrt2 = jnp.float32(1.0 / np.sqrt(2.0))
+    pow2 = jax.lax.bitcast_convert_type(
+        ((jnp.clip(127 - s, 1, 254)).astype(jnp.uint32)) << 23, jnp.float32)
+    return y * inv_sqrt2 * pow2

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: flash attention with Taylor-series-division softmax.
+
+Online-softmax attention (Dao et al.) adapted to the paper's division unit:
+the running row statistics (m, l) accumulate across key blocks; the final
+1/l normalization is the paper's PWL-seed + Taylor-refinement reciprocal
+(recip_f32_bits) instead of a hardware divide. Score tiles live in VMEM for
+their whole lifetime — HBM sees only Q/K/V reads and one output write, which
+is what zeroes the score term of the memory roofline (launch/memmodel.py,
+fused_attention=True).
+
+Grid: (batch*heads, q_blocks, k_blocks); k_blocks is the sequential
+('arbitrary') dimension — m/l/acc carriers are revisited outputs indexed by
+(bh, qi) only. Block shapes default to (128, head_dim) q x (128, head_dim) k:
+with hd=128 that is 64 KiB q + 64 KiB k/v + 64 KiB score tile in f32 —
+comfortably double-bufferable in VMEM, MXU-aligned (128x128 tiles).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.seeds import compute_segments
+from . import common
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k_blocks: int, table, n_iters: int, schedule: str):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[0]                              # (bq, 1)
+    l_prev = l_ref[0]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+    l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc = corr * acc_ref[0] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    acc_ref[0] = acc
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        # the paper's division unit: 1/l via PWL seed + Taylor refinement
+        rl = common.recip_f32_bits(l_ref[0], table, n_iters, schedule)
+        o_ref[0] = (acc_ref[0] * rl).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "n_iters",
+                     "precision_bits", "schedule", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    n_iters: int = 2, precision_bits: int = 24,
+                    schedule: str = "factored", interpret: bool = True):
+    """q/k/v: (BH, S, hd) -> (BH, S, hd). Causal flash attention, tsdiv softmax."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    nq, nk = sq // block_q, sk // block_k
+    table = compute_segments(n_iters, precision_bits)
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_k_blocks=nk, table=table, n_iters=n_iters,
+        schedule=schedule)
+
+    out, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            # per-(b, q-block) carriers: race-free when b/i run in parallel;
+            # on TPU these become VMEM scratch via scratch_shapes instead
+            pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq, 1), jnp.float32),    # m carrier
+            jax.ShapeDtypeStruct((bh, sq, 1), jnp.float32),    # l carrier
+            jax.ShapeDtypeStruct((bh, sq, hd), jnp.float32),   # acc carrier
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,162 @@
+"""Shape-generic jit'd wrappers around the Pallas kernels.
+
+Arbitrary-rank inputs are reshaped/padded to the 2D tiled forms the kernels
+expect (lane dim multiple of 128, sublane of 8), then cropped back. These are
+the entry points ``core.division_modes`` uses for mode="taylor_pallas".
+
+On CPU (this container) kernels run with interpret=True; on TPU set
+``repro.kernels.ops.INTERPRET = False`` (the launcher does this when
+jax.default_backend() == 'tpu').
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ilm as ilm_k
+from . import rmsnorm as rmsnorm_k
+from . import softmax as softmax_k
+from . import tsdiv as tsdiv_k
+
+INTERPRET = jax.default_backend() != "tpu"
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def pallas_applicable(x) -> bool:
+    """division_modes guard: kernels handle f32/bf16 with >= 2 total elements."""
+    return x.dtype in (jnp.float32, jnp.bfloat16) and x.size >= 1
+
+
+def _to_2d(x):
+    """Flatten to (M, N) with N a multiple of 128 and M of 8, padding with ones."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = _LANE
+    rows = -(-n // cols)
+    rows_p = -(-rows // _SUBLANE) * _SUBLANE
+    pad = rows_p * cols - n
+    flat = jnp.concatenate([flat, jnp.ones((pad,), flat.dtype)])
+    return flat.reshape(rows_p, cols), n
+
+
+def _from_2d(y, n, shape):
+    return y.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def tsdiv_recip(x, n_iters: int = 2, precision_bits: int = 24,
+                schedule: str = "factored"):
+    """Kernel reciprocal with analytic VJP (bitcasts bar autodiff):
+    d(1/x) = -r^2 dx, reusing the kernel's own r."""
+    orig_dtype, shape = x.dtype, x.shape
+    x2, n = _to_2d(x.astype(jnp.float32))
+    y = tsdiv_k.tsdiv_recip_2d(x2, n_iters=n_iters, precision_bits=precision_bits,
+                               schedule=schedule, interpret=INTERPRET)
+    return _from_2d(y, n, shape).astype(orig_dtype)
+
+
+def _recip_fwd(x, n_iters, precision_bits, schedule):
+    r = tsdiv_recip(x, n_iters, precision_bits, schedule)
+    return r, r
+
+
+def _recip_bwd(n_iters, precision_bits, schedule, r, g):
+    return (-(g * r * r),)
+
+
+tsdiv_recip.defvjp(_recip_fwd, _recip_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def tsdiv_divide(a, b, n_iters: int = 2, precision_bits: int = 24,
+                 schedule: str = "factored"):
+    orig_dtype, shape = a.dtype, a.shape
+    a2, n = _to_2d(a.astype(jnp.float32))
+    b2, _ = _to_2d(b.astype(jnp.float32))
+    y = tsdiv_k.tsdiv_divide_2d(a2, b2, n_iters=n_iters,
+                                precision_bits=precision_bits,
+                                schedule=schedule, interpret=INTERPRET)
+    return _from_2d(y, n, shape).astype(orig_dtype)
+
+
+def _divide_fwd(a, b, n_iters, precision_bits, schedule):
+    rb = tsdiv_recip(b, n_iters, precision_bits, schedule)
+    q = a * rb
+    return q, (q, rb)
+
+
+def _divide_bwd(n_iters, precision_bits, schedule, res, g):
+    q, rb = res
+    return (g * rb, -(g * q * rb))
+
+
+tsdiv_divide.defvjp(_divide_fwd, _divide_bwd)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, newton_iters: int = 2):
+    """RMSNorm over the last dim of any (..., D) array."""
+    shape = x.shape
+    d = shape[-1]
+    d_pad = -(-d // _LANE) * _LANE
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    m_pad = -(-m // _SUBLANE) * _SUBLANE
+    x2 = jnp.pad(x2, ((0, m_pad - m), (0, d_pad - d)))
+    wp = jnp.pad(w, (0, d_pad - d))
+    y = rmsnorm_k.rmsnorm_2d(x2, wp, eps=eps, newton_iters=newton_iters,
+                             d_real=d, interpret=INTERPRET)
+    return y[:m, :d].reshape(shape)
+
+
+def softmax(x, *, n_iters: int = 2, precision_bits: int = 24,
+            schedule: str = "factored"):
+    """Softmax over the last dim of any (..., D) array (pad masked to -inf)."""
+    shape = x.shape
+    d = shape[-1]
+    d_pad = -(-d // _LANE) * _LANE
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    m_pad = -(-m // _SUBLANE) * _SUBLANE
+    x2 = jnp.pad(x2, ((0, m_pad - m), (0, d_pad - d)),
+                 constant_values=-np.inf)
+    y = softmax_k.softmax_2d(x2, n_iters=n_iters, precision_bits=precision_bits,
+                             schedule=schedule, interpret=INTERPRET)
+    return y[:m, :d].reshape(shape)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, n_iters: int = 2,
+                    precision_bits: int = 24):
+    """Flash attention with tsdiv softmax. q/k/v: (..., S, hd); leading dims
+    flattened to the batch*heads grid axis."""
+    from . import flash_attention as fa
+
+    lead = q.shape[:-2]
+    s, hd = q.shape[-2], q.shape[-1]
+    q3 = q.reshape(-1, s, hd)
+    k3 = k.reshape(-1, k.shape[-2], hd)
+    v3 = v.reshape(-1, v.shape[-2], hd)
+    o = fa.flash_attention(q3, k3, v3, causal=causal, block_q=block_q,
+                           block_k=block_k, n_iters=n_iters,
+                           precision_bits=precision_bits, interpret=INTERPRET)
+    return o.reshape(*lead, s, hd)
+
+
+def ilm_mul(a, b, *, iters: int = 16):
+    shape = a.shape
+    a2, n = _to_2d(a.astype(jnp.uint32))
+    b2, _ = _to_2d(b.astype(jnp.uint32))
+    y = ilm_k.ilm_mul_2d(a2, b2, iters=iters, interpret=INTERPRET)
+    return _from_2d(y, n, shape)
+
+
+def ilm_square(a, *, iters: int = 16):
+    shape = a.shape
+    a2, n = _to_2d(a.astype(jnp.uint32))
+    y = ilm_k.ilm_square_2d(a2, iters=iters, interpret=INTERPRET)
+    return _from_2d(y, n, shape)

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused Taylor-series reciprocal / divide (the paper's unit).
+
+Elementwise over 2D-tiled blocks resident in VMEM. The whole division unit —
+unpack, PWL seed ladder, series refinement, repack — is one fused VPU kernel:
+a single HBM read and write per element, vs. read/write per stage if composed
+from jnp ops without fusion. Block shape defaults to (256, 256) f32 = 256 KiB
+in + 256 KiB out, comfortably inside the ~16 MiB/core VMEM with double
+buffering; the lane dim is a multiple of 128 (VREG lane width) and the
+sublane dim a multiple of 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.seeds import SeedTable, compute_segments
+from . import common
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _recip_kernel(x_ref, o_ref, *, table: SeedTable, n: int, schedule: str):
+    o_ref[...] = common.recip_f32_bits(x_ref[...], table, n, schedule)
+
+
+def _divide_kernel(a_ref, b_ref, o_ref, *, table: SeedTable, n: int, schedule: str):
+    o_ref[...] = a_ref[...] * common.recip_f32_bits(b_ref[...], table, n, schedule)
+
+
+def _grid_spec(shape, block):
+    bm, bn = min(block[0], shape[0]), min(block[1], shape[1])
+    grid = (pl.cdiv(shape[0], bm), pl.cdiv(shape[1], bn))
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return grid, spec
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "precision_bits", "schedule",
+                                             "block", "interpret"))
+def tsdiv_recip_2d(x, *, n_iters: int = 2, precision_bits: int = 24,
+                   schedule: str = "factored", block=DEFAULT_BLOCK,
+                   interpret: bool = True):
+    """Reciprocal of an f32 (M, N) array via the fused division-unit kernel."""
+    table = compute_segments(n_iters, precision_bits)
+    grid, spec = _grid_spec(x.shape, block)
+    return pl.pallas_call(
+        functools.partial(_recip_kernel, table=table, n=n_iters, schedule=schedule),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "precision_bits", "schedule",
+                                             "block", "interpret"))
+def tsdiv_divide_2d(a, b, *, n_iters: int = 2, precision_bits: int = 24,
+                    schedule: str = "factored", block=DEFAULT_BLOCK,
+                    interpret: bool = True):
+    """a / b elementwise: reciprocal datapath + the final multiplier (Fig. 7)."""
+    table = compute_segments(n_iters, precision_bits)
+    grid, spec = _grid_spec(a.shape, block)
+    return pl.pallas_call(
+        functools.partial(_divide_kernel, table=table, n=n_iters, schedule=schedule),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=interpret,
+    )(a, b)

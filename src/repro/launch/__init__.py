@@ -1,0 +1,8 @@
+"""Launchers: production-mesh dry-run, roofline analysis, train/serve drivers.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time and
+must only be imported as __main__ (or deliberately, first, by tooling).
+"""
+from . import mesh, roofline
+
+__all__ = ["mesh", "roofline"]

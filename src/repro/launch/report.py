@@ -1,0 +1,63 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs.
+
+  PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(d: str):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_bytes(b):
+    b = max(0.0, b)  # affine-probe extrapolation can leave tiny negatives
+    if b >= 1e9:
+        return f"{b/1e9:.1f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b/1e3:.0f}K"
+
+
+def table(cells, mesh="single", variant="base"):
+    rows = [c for c in cells if c["mesh"] == mesh and c.get("variant", "base") == variant]
+    rows.sort(key=lambda c: (c["arch"], c["shape"]))
+    out = []
+    out.append("| arch | shape | t_compute | t_memory | t_collective | bound "
+               "| t_step | MFU | flops_eff | HBM/dev | fits | ICI | DCN |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    HBM_CAP = 16 * 1024**3  # v5e
+    for c in rows:
+        r = c["roofline"]
+        mem = c["memory"]["total_hbm_bytes"]
+        fits = "yes" if mem <= HBM_CAP else "**NO**"
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {r['t_compute']*1e3:.1f}ms "
+            f"| {r['t_memory']*1e3:.1f}ms | {r['t_collective']*1e3:.1f}ms "
+            f"| **{r['bound']}** | {r['t_step']*1e3:.1f}ms "
+            f"| {r['mfu']:.3f} | {r['flops_efficiency']:.2f} "
+            f"| {fmt_bytes(mem)} | {fits} | {fmt_bytes(r['ici_bytes'])} "
+            f"| {fmt_bytes(r['dcn_bytes'])} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print(table(cells, args.mesh, args.variant))
+
+
+if __name__ == "__main__":
+    main()

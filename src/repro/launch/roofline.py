@@ -1,0 +1,222 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e model).
+
+Three terms, all in seconds-per-step on the target hardware:
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = sum over collective ops of wire_bytes(op) / link_BW
+               (ICI and DCN accounted separately; DCN = groups spanning pods)
+
+``cost_analysis()`` provides per-device flops / bytes-accessed. Collective
+bytes are parsed from the compiled HLO text: for each all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute we take the
+result-shape bytes and apply the standard ring-algorithm wire factor over the
+replica-group size g:
+  all-reduce      2*(g-1)/g     all-gather / reduce-scatter   (g-1)/g
+  all-to-all      (g-1)/g       collective-permute            1
+Hardware constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI,
+~25 GB/s/host DCN (assumption recorded in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+DCN_BW = 25e9           # bytes/s per host (cross-pod)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?"
+    r"(?P<types>\(?[a-z0-9\[\],{}\s/_*]*\)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(?P<dt>pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[(?P<dims>[0-9,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?|replica_groups=\[")
+
+
+def _shape_bytes(types_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(types_str):
+        dims = m.group("dims")
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group("dt")]
+    return total
+
+
+def _crosses_pod(groups, pod_size: Optional[int]) -> bool:
+    if not pod_size:
+        return False
+    for ids in groups:
+        pods = {i // pod_size for i in ids}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+def _group_info(line: str, n_devices: int, pod_size: Optional[int]
+                ) -> Tuple[int, bool]:
+    """Returns (group_size, crosses_pod). Handles both explicit
+    ``replica_groups={{0,1},{2,3}}`` and iota
+    ``replica_groups=[R,G]<=[d0,d1,..]T(p..)`` forms exactly."""
+    m = re.search(r"replica_groups=\{\{(.*?)\}\}", line)
+    if m:
+        groups = []
+        for grp in m.group(1).split("},{"):
+            groups.append([int(x) for x in grp.split(",") if x.strip()])
+        g = max(len(x) for x in groups)
+        return g, _crosses_pod(groups, pod_size)
+    mi = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", line)
+    if mi:
+        import numpy as _np
+
+        r, g = int(mi.group(1)), int(mi.group(2))
+        dims = [int(x) for x in mi.group(3).split(",")]
+        ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if mi.group(4):
+            perm = [int(x) for x in mi.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(r, g).tolist()
+        return g, _crosses_pod(groups, pod_size)
+    return n_devices, pod_size is not None and n_devices > pod_size
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      pod_size: Optional[int] = None) -> Dict:
+    """Sum wire bytes per device over all collective ops in the HLO.
+
+    Two tallies: raw (as compiled for CPU) and TPU-corrected. The XLA CPU
+    backend has no bf16 compute, so it upcasts bf16 partial sums to f32
+    before all-reducing (operands named ``%convert...``); on TPU those
+    reductions ride the wire in bf16 — the corrected tally halves them.
+    (Verified: the StableHLO keeps bf16; the f32 appears only post-CPU-
+    partitioning, always behind a convert fusion.)"""
+    ici_bytes = 0.0
+    dcn_bytes = 0.0
+    ici_tpu = 0.0
+    dcn_tpu = 0.0
+    ops: List[Dict] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        if "-done" in line.split("(")[0]:
+            continue  # async pair: count the -start only
+        op = m.group("op").lower()
+        nbytes = _shape_bytes(m.group("types"))
+        if nbytes == 0:
+            continue
+        g, crosses = _group_info(line, n_devices, pod_size)
+        wire = _WIRE_FACTOR[op](max(g, 1)) * nbytes
+        # CPU-upcast detection: f32 reduction fed by a convert fusion
+        upcast = (op in ("all-reduce", "reduce-scatter")
+                  and "f32" in m.group("types") and "%convert" in line)
+        wire_tpu = wire * (0.5 if upcast else 1.0)
+        if crosses:
+            dcn_bytes += wire
+            dcn_tpu += wire_tpu
+        else:
+            ici_bytes += wire
+            ici_tpu += wire_tpu
+        ops.append({"op": op, "bytes": nbytes, "group": g,
+                    "wire_bytes": wire, "wire_bytes_tpu": wire_tpu,
+                    "cross_pod": crosses, "cpu_upcast": upcast})
+    return {"ici_bytes": ici_bytes, "dcn_bytes": dcn_bytes,
+            "ici_bytes_tpu": ici_tpu, "dcn_bytes_tpu": dcn_tpu, "ops": ops}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                # per device
+    bytes_accessed: float       # per device
+    ici_bytes: float            # TPU-corrected wire bytes (bf16 reductions)
+    dcn_bytes: float
+    model_flops: float          # 6ND (train) / 2ND (inference), per device
+    ici_bytes_raw: float = 0.0  # as-compiled-for-CPU tally (f32 upcasts)
+    dcn_bytes_raw: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.ici_bytes / ICI_BW + self.dcn_bytes / DCN_BW
+
+    @property
+    def t_collective_raw(self) -> float:
+        return self.ici_bytes_raw / ICI_BW + self.dcn_bytes_raw / DCN_BW
+
+    @property
+    def bound(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_step(self) -> float:
+        """Perfect-overlap model: step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline step time."""
+        if self.t_step == 0:
+            return 0.0
+        return self.model_flops / PEAK_FLOPS / self.t_step
+
+    @property
+    def flops_efficiency(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: fraction of compiled compute that is
+        'useful' (remat recompute and padding waste lower this)."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "ici_bytes": self.ici_bytes, "dcn_bytes": self.dcn_bytes,
+            "ici_bytes_raw": self.ici_bytes_raw,
+            "dcn_bytes_raw": self.dcn_bytes_raw,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "t_collective_raw": self.t_collective_raw,
+            "t_step": self.t_step,
+            "bound": self.bound, "mfu": self.mfu,
+            "flops_efficiency": self.flops_efficiency,
+        }
+
+
+def model_flops_per_device(n_active_params: int, tokens_global: int,
+                           n_devices: int, kind: str) -> float:
+    """6ND for training, 2ND for inference forward passes."""
+    c = 6.0 if kind == "train" else 2.0
+    return c * n_active_params * tokens_global / n_devices

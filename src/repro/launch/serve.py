@@ -1,0 +1,38 @@
+"""Serving launcher: prefill + batched greedy decode on the host.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch paper_fpdiv --smoke \
+      --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper_fpdiv")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import init_params
+    from repro.serving import ServingEngine
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    engine = ServingEngine(cfg, params, max_len=args.prompt_len + args.max_new + 64)
+    prompt = list(range(1, args.prompt_len + 1))
+    out = engine.generate(prompt, max_new=args.max_new)
+    print(f"prompt({len(prompt)} toks) -> generated {len(out)} tokens: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model definitions: pattern-driven transformer/SSM/MoE stacks."""
+from . import attention, layers, mamba2, model, moe, params
+from .model import forward, make_cache
+from .params import abstract_params, init_params, logical_axes, param_count
+
+__all__ = [
+    "attention", "layers", "mamba2", "model", "moe", "params",
+    "forward", "make_cache",
+    "abstract_params", "init_params", "logical_axes", "param_count",
+]

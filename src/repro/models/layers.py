@@ -1,0 +1,47 @@
+"""Shared layer primitives. Every division/rsqrt goes through core.division_modes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import division_modes as dm
+from repro.configs.base import ModelConfig
+
+
+def rms_norm(x, w, div: dm.DivisionConfig, eps: float = 1e-6):
+    """RMSNorm; the 1/sqrt is the paper-machinery rsqrt when div.mode != exact."""
+    xf = x.astype(jnp.float32)
+    ss = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = dm.rsqrt(ss + eps, div)
+    return (xf * r * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embeddings. x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def gated_mlp(p, x):
+    """SwiGLU MLP: wo(silu(wg x) * (wi x))."""
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["wg"]).astype(jnp.float32))
+    return jnp.einsum("...f,fd->...d", (g.astype(h.dtype) * h), p["wo"])
+
+
+def embed_tokens(embed, tokens, cfg: ModelConfig):
+    return jnp.take(embed, tokens, axis=0)
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("...d,dv->...v", x, head,
+                      preferred_element_type=jnp.float32)

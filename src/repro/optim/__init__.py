@@ -1,0 +1,4 @@
+from . import adamw, compress
+from .adamw import AdamWConfig
+
+__all__ = ["adamw", "compress", "AdamWConfig"]

@@ -1,0 +1,63 @@
+"""Int8 error-feedback gradient compression for the cross-pod (DCN) axis.
+
+At 512+ chips the pod-crossing all-reduce rides data-center network, ~10x
+slower per byte than ICI. Quantizing the pod-reduction operand to int8 with a
+pod-shared per-tensor scale cuts DCN bytes 4x (vs f32) / 2x (vs bf16); the
+residual (error feedback, Karimireddy et al. 2019) carries into the next step
+so quantization noise is compensated over time and convergence is preserved
+(validated in tests/test_optim.py on a real loss curve).
+
+Protocol per tensor (inside a pjit/shard_map body with a named 'pod' axis):
+  1. compensate:  g' = g + err
+  2. share scale: s = pmax_pod(max|g'|) / 127     (scalar collective, ~free)
+  3. quantize:    q = round(g'/s) in int8
+  4. reduce:      acc = psum_pod(q as int16)      (int16 accumulators are safe
+                  up to 256 pods; the wire format models int8 + switch-side
+                  accumulation — roofline counts 1 byte/element)
+  5. dequantize:  mean = acc * s / n_pods;  err' = g' - q*s
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_tree(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def psum_compressed(grads, err_tree, axis_name: str):
+    """Cross-pod mean of grads with int8 error-feedback compression.
+
+    Returns (mean_tree_f32, new_err_tree). Must run where ``axis_name`` is a
+    manual/named axis (shard_map) or inside jit with mesh axis semantics.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, err):
+        gf = g.astype(jnp.float32) + err
+        local_max = jnp.max(jnp.abs(gf))
+        scale = jnp.maximum(jax.lax.pmax(local_max, axis_name), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        acc = jax.lax.psum(q.astype(jnp.int16), axis_name)
+        mean = acc.astype(jnp.float32) * scale / n
+        new_err = gf - q.astype(jnp.float32) * scale
+        return mean, new_err
+
+    out = jax.tree_util.tree_map(leaf, grads, err_tree)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], tuple)
+    mean = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_pair)
+    new_err = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_pair)
+    return mean, new_err
+
+
+def quantize_roundtrip(g, err):
+    """Single-host test hook: quantize + dequantize with error feedback."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gf - deq

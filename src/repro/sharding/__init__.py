@@ -1,0 +1,3 @@
+from .rules import batch_axes, data_sharding, param_shardings, replicated, spec_for
+
+__all__ = ["batch_axes", "data_sharding", "param_shardings", "replicated", "spec_for"]

@@ -1,0 +1,114 @@
+"""Logical-axis -> mesh-axis resolution (t5x-style rules).
+
+A parameter's logical axes (e.g. ('embed', 'heads', 'head_dim')) resolve to a
+PartitionSpec through the arch's rules dict. Two safety drops keep every spec
+valid by construction:
+  * divisibility drop — a dim not divisible by its mesh axis size falls back
+    to replicated (this is how GQA with kv_heads < model-axis size degrades to
+    Megatron-style replicated KV);
+  * duplicate drop — a mesh axis already consumed by an earlier dim of the
+    same param is not reused (e.g. Jamba experts->data + embed->data).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, rules_for
+from repro.models import params as params_lib
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             rules: Dict[str, Optional[str]], mesh: Mesh) -> P:
+    parts = []
+    used = set()
+    for size, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if (mesh_ax is None or mesh_ax in used
+                or mesh_ax not in mesh.shape
+                or size % mesh.shape[mesh_ax] != 0):
+            parts.append(None)
+            continue
+        parts.append(mesh_ax)
+        used.add(mesh_ax)
+    return P(*parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    """Pytree of NamedSharding matching abstract_params(cfg)."""
+    rules = rules_for(cfg)
+    abstract = params_lib.abstract_params(cfg)
+    axes = params_lib.logical_axes(cfg)
+    return jax.tree_util.tree_map(
+        lambda a, ax: NamedSharding(mesh, spec_for(a.shape, ax, rules, mesh)),
+        abstract, axes)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry the batch dim: ('pod','data') when pod exists."""
+    return tuple(ax for ax in ("pod", "data") if ax in mesh.shape)
+
+
+def data_sharding(mesh: Mesh, ndim: int, *, batch_dim: int = 0,
+                  seq_dim: Optional[int] = None, seq_axis: Optional[str] = None,
+                  batch_size: Optional[int] = None) -> NamedSharding:
+    """Input sharding: batch over ('pod','data'); optional sequence sharding
+    (long-context decode shards the KV-cache seq dim instead of batch=1)."""
+    parts: list = [None] * ndim
+    ba = batch_axes(mesh)
+    n_batch_devices = 1
+    for ax in ba:
+        n_batch_devices *= mesh.shape[ax]
+    if batch_size is None or batch_size % n_batch_devices == 0:
+        parts[batch_dim] = ba if len(ba) > 1 else (ba[0] if ba else None)
+    if seq_dim is not None and seq_axis is not None and seq_axis in mesh.shape:
+        parts[seq_dim] = seq_axis
+    return NamedSharding(mesh, P(*parts))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------- activations
+# Model code applies *partial* sharding constraints (P.UNCONSTRAINED elsewhere)
+# at points where GSPMD's propagation is known to go wrong (GQA head-repeat:
+# without a constraint the partitioner all-reduces full score tensors). The
+# active mesh is registered by the launcher; without one, constraints no-op so
+# single-device tests/examples run unchanged.
+
+import contextlib
+import threading
+
+_ACTIVE = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = getattr(_ACTIVE, "mesh", None)
+    _ACTIVE.mesh = mesh
+    try:
+        yield
+    finally:
+        _ACTIVE.mesh = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_ACTIVE, "mesh", None)
+
+
+def shard_dim(x, dim: int, axis: str = "model"):
+    """Constrain one dim of x to a mesh axis; UNCONSTRAINED elsewhere.
+    No-op when no mesh is active, axis missing, or dim not divisible."""
+    mesh = active_mesh()
+    if mesh is None or axis not in mesh.shape:
+        return x
+    if dim < 0:
+        dim += x.ndim
+    if x.shape[dim] % mesh.shape[axis] != 0:
+        return x
+    spec = [P.UNCONSTRAINED] * x.ndim
+    spec[dim] = axis
+    return jax.lax.with_sharding_constraint(x, P(*spec))

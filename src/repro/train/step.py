@@ -1,0 +1,114 @@
+"""Loss and train-step: grad-accumulation microbatching, AdamW, compression.
+
+The train step is one jit-compiled function over (state, batch):
+  * batch (B_local_total, S) splits into ``n_micro`` microbatches;
+  * a lax.scan accumulates grads (f32) across microbatches — activations for
+    only one microbatch live at a time (remat inside the model bounds them
+    further to one layer-period);
+  * gradients average over the data axes implicitly via SPMD partial-sums of
+    the batch-sharded loss; the optional cross-pod int8 compression hook
+    applies where the mesh has a 'pod' axis (dryrun variant flag).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def init_state(cfg: ModelConfig, params, opt_cfg: adamw.AdamWConfig) -> TrainState:
+    return TrainState(params=params, opt=adamw.init(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_state(cfg: ModelConfig, params_abstract,
+                   opt_cfg: adamw.AdamWConfig) -> TrainState:
+    return TrainState(params=params_abstract,
+                      opt=adamw.abstract_state(params_abstract, opt_cfg),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def cross_entropy(logits, labels):
+    """Mean CE. logits f32 (B,S,V) possibly vocab-sharded; labels (B,S)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["enc_embeds"] = batch["enc_embeds"]
+    if cfg.embed_inputs and not cfg.is_encoder_decoder:
+        logits, _, aux = forward(cfg, params, embeds=batch["embeds"],
+                                 mode="train", **kw)
+    else:
+        logits, _, aux = forward(cfg, params, tokens=batch["tokens"],
+                                 mode="train", **kw)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def _split_micro(batch, n_micro: int):
+    """(B, ...) -> (n_micro, B/n_micro, ...) per leaf."""
+    def sp(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree_util.tree_map(sp, batch)
+
+
+def grads_fn(cfg: ModelConfig, params, batch, n_micro: int):
+    """Microbatched value-and-grad via lax.scan accumulation (f32 grads)."""
+    gfun = jax.value_and_grad(lambda p, b: loss_fn(cfg, p, b), has_aux=True)
+    if n_micro <= 1:
+        (loss, metrics), grads = gfun(params, batch)
+        return loss, metrics, jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+
+    micro = _split_micro(batch, n_micro)
+    g0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(acc, mb):
+        g_acc, loss_acc = acc
+        (loss, _), g = gfun(params, mb)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        return (g_acc, loss_acc + loss), None
+
+    (g_sum, loss_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree_util.tree_map(lambda g: g * inv, g_sum)
+    loss = loss_sum * inv
+    return loss, {"ce": loss, "aux": jnp.float32(0.0)}, grads
+
+
+def train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, state: TrainState,
+               batch, *, n_micro: int = 1, lr_scale=1.0,
+               compress_axis: Optional[str] = None, err_tree=None):
+    """One optimizer step. Returns (new_state, metrics[, new_err_tree])."""
+    loss, metrics, grads = grads_fn(cfg, state.params, batch, n_micro)
+    new_err = None
+    if compress_axis is not None:
+        from repro.optim import compress
+        grads, new_err = compress.psum_compressed(grads, err_tree, compress_axis)
+    new_params, new_opt = adamw.update(grads, state.opt, state.params, opt_cfg,
+                                       lr_scale)
+    new_state = TrainState(params=new_params, opt=new_opt, step=state.step + 1)
+    metrics = dict(metrics, loss=loss, step=state.step)
+    if compress_axis is not None:
+        return new_state, metrics, new_err
+    return new_state, metrics

@@ -1,0 +1,69 @@
+"""Checkpointing: bit-exact roundtrip, atomicity, GC, incomplete rejection."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ck
+
+
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.bfloat16) * 1.5,
+                   "c": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 7, t)
+    step, restored = ck.restore_latest(str(tmp_path), t)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, t, keep=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    assert sorted(ck.all_steps(str(tmp_path))) == [4, 5]
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    # simulate a crash mid-write: dir exists but no COMPLETE marker
+    broken = tmp_path / "step_0000000002"
+    broken.mkdir()
+    (broken / "meta.json").write_text("{}")
+    assert ck.latest_step(str(tmp_path)) == 1  # ignores the broken one
+    step, _ = ck.restore_latest(str(tmp_path), t)
+    assert step == 1
+
+
+def test_restore_missing_returns_like(tmp_path):
+    t = _tree()
+    step, restored = ck.restore_latest(str(tmp_path / "nope"), t)
+    assert step is None
+    assert restored is t
+
+
+def test_hypothesis_roundtrip_dtypes(tmp_path):
+    """Property-ish sweep: all framework dtypes survive the byte roundtrip."""
+    for i, dt in enumerate([jnp.float32, jnp.bfloat16, jnp.float16,
+                            jnp.int32, jnp.int8, jnp.uint32]):
+        t = {"x": jnp.asarray(np.random.default_rng(i).integers(
+            0, 100, (4, 5)), dt)}
+        d = str(tmp_path / f"dt{i}")
+        ck.save(d, 1, t)
+        _, r = ck.restore_latest(d, t)
+        assert r["x"].dtype == dt
+        assert bool(jnp.all(r["x"] == t["x"]))

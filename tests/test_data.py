@@ -1,0 +1,52 @@
+"""Data pipeline: determinism, host sharding, learnable structure."""
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM
+
+
+def test_deterministic_and_seekable():
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=8, seed=7)
+    d1 = SyntheticLM(cfg)
+    d2 = SyntheticLM(cfg)
+    for step in (0, 5, 1000):
+        b1, b2 = d1.batch(step), d2.batch(step)
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+        assert np.array_equal(b1["labels"], b2["labels"])
+    assert not np.array_equal(d1.batch(1)["tokens"], d1.batch(2)["tokens"])
+
+
+def test_labels_shifted():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=2)
+    b = SyntheticLM(cfg).batch(0)
+    assert b["tokens"].shape == (2, 16)
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharding_disjoint_and_covering():
+    cfg = DataConfig(vocab=500, seq_len=32, global_batch=8, seed=3)
+    hosts = [SyntheticLM(cfg, host_index=i, host_count=4) for i in range(4)]
+    batches = [h.batch(12)["tokens"] for h in hosts]
+    assert all(b.shape == (2, 32) for b in batches)
+    # different hosts produce different rows (independent streams)
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(batches[i], batches[j])
+
+
+def test_prefetch_iterator_matches_batches():
+    cfg = DataConfig(vocab=200, seq_len=16, global_batch=2)
+    d = SyntheticLM(cfg)
+    it = d.iter(start_step=3)
+    for step in (3, 4, 5):
+        got = next(it)
+        want = d.batch(step)
+        assert np.array_equal(got["tokens"], want["tokens"])
+
+
+def test_motifs_make_data_learnable():
+    """Consecutive-token motifs exist: P(next == cur+1) is well above chance."""
+    cfg = DataConfig(vocab=1000, seq_len=256, global_batch=4)
+    b = SyntheticLM(cfg).batch(0)
+    t = b["tokens"]
+    frac = np.mean(t[:, 1:] == t[:, :-1] + 1)
+    assert frac > 0.05  # chance level would be ~1/1000

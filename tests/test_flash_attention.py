@@ -1,0 +1,77 @@
+"""Flash-attention Pallas kernel (online softmax + tsdiv normalization)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@given(st.sampled_from([32, 64, 128]), st.sampled_from([16, 32, 64]),
+       st.sampled_from([16, 32, 64]), st.booleans(), st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_property_flash_matches_oracle(s, hd, bk, causal, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, s, hd)).astype(np.float32))
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=min(32, s),
+                            block_k=min(bk, s))
+    e = ref.flash_attention_exact(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(e),
+                               atol=3e-6, rtol=1e-4)
+
+
+CASES = [
+    # (bh, sq, hd, block_q, block_k, causal)
+    (2, 256, 64, 128, 128, True),
+    (3, 128, 32, 64, 32, True),
+    (2, 256, 64, 128, 64, False),
+    (1, 512, 128, 128, 128, True),
+    (2, 64, 16, 64, 64, True),     # single block (degenerate)
+]
+
+
+@pytest.mark.parametrize("bh,s,hd,bq,bk,causal", CASES)
+def test_flash_vs_exact(rng, bh, s, hd, bq, bk, causal):
+    q = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    e = ref.flash_attention_exact(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(e),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_flash_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    o = ops.flash_attention(q, k, v)
+    e = ref.flash_attention_exact(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(e, np.float32), atol=0.04)
+
+
+def test_flash_4d_input(rng):
+    """(B, H, S, hd) leading dims flatten onto the grid axis."""
+    q = jnp.asarray(rng.normal(size=(2, 4, 128, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 4, 128, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 4, 128, 32)).astype(np.float32))
+    o = ops.flash_attention(q, k, v)
+    assert o.shape == (2, 4, 128, 32)
+    e = ref.flash_attention_exact(q.reshape(8, 128, 32), k.reshape(8, 128, 32),
+                                  v.reshape(8, 128, 32)).reshape(2, 4, 128, 32)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(e), atol=2e-6)
+
+
+def test_flash_long_context_streaming(rng):
+    """Many key blocks: the online rescaling stays numerically stable."""
+    q = jnp.asarray(rng.normal(size=(1, 1024, 32)).astype(np.float32)) * 3
+    k = jnp.asarray(rng.normal(size=(1, 1024, 32)).astype(np.float32)) * 3
+    v = jnp.asarray(rng.normal(size=(1, 1024, 32)).astype(np.float32))
+    o = ops.flash_attention(q, k, v, block_q=128, block_k=64)
+    e = ref.flash_attention_exact(q, k, v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(e),
+                               atol=5e-6, rtol=1e-4)

@@ -1,0 +1,121 @@
+"""Pallas kernels: shape/dtype sweeps, interpret mode vs pure-jnp oracles.
+
+Two comparisons per kernel:
+  * vs ref  (same algorithm)  — tight: <= few ulp (FMA-contraction noise only)
+  * vs exact (true math)      — tolerance derived from the paper's eq. 17
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 128), (64, 256), (100, 130), (256, 512), (3, 7), (1, 1)]
+
+
+def _rand(rng, shape, lo, hi, dtype=np.float32):
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(dtype))
+
+
+class TestTsdiv:
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_recip_vs_ref_and_exact(self, rng, shape):
+        x = _rand(rng, shape, 0.01, 1000)
+        k = ops.tsdiv_recip(x)
+        r = ref.tsdiv_recip_ref(x)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(r), rtol=3e-7)
+        e = np.asarray(ref.tsdiv_recip_exact(x))
+        np.testing.assert_allclose(np.asarray(k), e, rtol=2**-20)
+
+    @pytest.mark.parametrize("n_iters,prec,rtol", [(1, 12, 2**-11),
+                                                   (2, 24, 2**-20),
+                                                   (3, 30, 2**-21)])
+    def test_precision_dial(self, rng, n_iters, prec, rtol):
+        """The paper's accuracy dial: more iterations -> tighter result."""
+        x = _rand(rng, (64, 256), 0.1, 100)
+        k = ops.tsdiv_recip(x, n_iters=n_iters, precision_bits=prec)
+        e = np.asarray(ref.tsdiv_recip_exact(x))
+        np.testing.assert_allclose(np.asarray(k), e, rtol=rtol)
+
+    @pytest.mark.parametrize("schedule", ["paper", "factored"])
+    def test_schedules(self, rng, schedule):
+        x = _rand(rng, (32, 256), 0.5, 2.0)
+        k = ops.tsdiv_recip(x, schedule=schedule)
+        np.testing.assert_allclose(
+            np.asarray(k), np.asarray(ref.tsdiv_recip_ref(x, schedule=schedule)),
+            rtol=3e-7)
+
+    @pytest.mark.parametrize("shape", [(16, 128), (65, 40)])
+    def test_divide(self, rng, shape):
+        a = _rand(rng, shape, -50, 50)
+        b = _rand(rng, shape, 0.1, 100)
+        k = ops.tsdiv_divide(a, b)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(a) / np.asarray(b),
+                                   rtol=2**-18, atol=1e-6)
+
+    def test_negative_and_edges(self):
+        x = jnp.asarray([[-2.0, 4.0, -0.5, 1.0, 3.0, -1.5, 8.0, 0.25]],
+                        jnp.float32)
+        k = np.asarray(ops.tsdiv_recip(x))
+        np.testing.assert_allclose(k, 1.0 / np.asarray(x), rtol=2e-6)
+
+    def test_bf16_passthrough(self, rng):
+        x = _rand(rng, (32, 128), 0.1, 10).astype(jnp.bfloat16)
+        k = ops.tsdiv_recip(x)
+        assert k.dtype == jnp.bfloat16
+        rel = np.abs(np.asarray(k, np.float32) * np.asarray(x, np.float32) - 1)
+        assert rel.max() < 0.02
+
+
+class TestRmsnorm:
+    @pytest.mark.parametrize("shape", [(4, 64), (16, 250), (2, 8, 96)])
+    def test_vs_ref_and_exact(self, rng, shape):
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32)) * 3
+        w = jnp.asarray(rng.normal(size=shape[-1:]).astype(np.float32))
+        k = ops.rmsnorm(x, w)
+        r = ref.rmsnorm_ref(x, w)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5)
+        e = ref.rmsnorm_exact(x, w)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(e),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestSoftmax:
+    @pytest.mark.parametrize("shape", [(8, 128), (37, 250), (4, 16, 64)])
+    def test_vs_exact(self, rng, shape):
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32)) * 5
+        k = ops.softmax(x)
+        e = ref.softmax_exact(x)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(e),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(k).sum(-1), 1.0, rtol=1e-5)
+
+    def test_extreme_logits(self):
+        x = jnp.asarray([[-1e30, 0.0, 1.0, -1e30]], jnp.float32)
+        k = np.asarray(ops.softmax(x))
+        assert np.all(np.isfinite(k))
+        np.testing.assert_allclose(k.sum(-1), 1.0, rtol=1e-5)
+
+
+class TestIlmKernel:
+    @pytest.mark.parametrize("shape", [(8, 128), (33, 70)])
+    def test_exact_full_iters(self, rng, shape):
+        a = jnp.asarray(rng.integers(0, 2**16, shape), jnp.uint32)
+        b = jnp.asarray(rng.integers(0, 2**16, shape), jnp.uint32)
+        k = ops.ilm_mul(a, b)
+        assert bool(jnp.all(k == a * b))
+
+    @pytest.mark.parametrize("iters", [1, 2, 4, 8])
+    def test_matches_core_ref(self, rng, iters):
+        a = jnp.asarray(rng.integers(1, 2**16, (16, 128)), jnp.uint32)
+        b = jnp.asarray(rng.integers(1, 2**16, (16, 128)), jnp.uint32)
+        k = ops.ilm_mul(a, b, iters=iters)
+        r = ref.ilm_mul_ref(a, b, iters=iters)
+        assert bool(jnp.all(k == r))
+
+    def test_square(self, rng):
+        a = jnp.asarray(rng.integers(0, 2**16, (16, 128)), jnp.uint32)
+        assert bool(jnp.all(ops.ilm_square(a) == a * a))

@@ -1,0 +1,98 @@
+"""Roofline machinery: HLO collective parsing, wire factors, pod detection."""
+import numpy as np
+import pytest
+
+from repro.launch import roofline as rl
+
+
+HLO = """
+ENTRY %main {
+  %ar = f32[4,1024]{1,0} all-reduce(%convert_bitcast_fusion.3), replica_groups=[64,4]<=[256], to_apply=%add
+  %ag = bf16[8,2048]{1,0} all-gather(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %rs = f32[2,512]{1,0} reduce-scatter(%fusion.9), replica_groups=[32,16]<=[512], to_apply=%add
+  %cp = bf16[16,128]{1,0} collective-permute(%p1), source_target_pairs={{0,1}}
+  %a2a = f32[4,4096]{1,0} all-to-all(%p2), replica_groups=[2,256]<=[2,256]T(1,0), dimensions={0}
+"""
+
+
+class TestParse:
+    def test_counts_and_factors(self):
+        out = rl.parse_collectives(HLO, 512, pod_size=256)
+        ops = {o["op"]: o for o in out["ops"]}
+        # all-reduce f32 4x1024 = 16384B, g=4 -> wire 2*(3/4)*16384
+        assert ops["all-reduce"]["bytes"] == 4 * 1024 * 4
+        assert abs(ops["all-reduce"]["wire_bytes"] - 1.5 * 16384) < 1
+        # CPU-upcast detection: convert-fed f32 reduction halves on TPU
+        assert ops["all-reduce"]["cpu_upcast"]
+        assert abs(ops["all-reduce"]["wire_bytes_tpu"]
+                   - 0.75 * 16384) < 1
+        # all-gather bf16, g=4 -> (3/4) * bytes, no upcast
+        assert not ops["all-gather"]["cpu_upcast"]
+        assert abs(ops["all-gather"]["wire_bytes"]
+                   - 0.75 * 8 * 2048 * 2) < 1
+        # permute factor 1
+        assert ops["collective-permute"]["wire_bytes"] == 16 * 128 * 2
+
+    def test_pod_crossing_iota_transpose(self):
+        """[2,256]<=[2,256]T(1,0): 2 groups of 256 interleaving pods — DCN."""
+        out = rl.parse_collectives(HLO, 512, pod_size=256)
+        ops = {o["op"]: o for o in out["ops"]}
+        assert ops["all-to-all"]["cross_pod"]
+        assert ops["all-to-all"]["group"] == 256
+        # the canonical pod all-reduce form: [256,2]<=[2,256]T(1,0)
+        pod_ar = ("  %x = f32[16]{0} all-reduce(%p), "
+                  "replica_groups=[256,2]<=[2,256]T(1,0), to_apply=%add")
+        o2 = rl.parse_collectives(pod_ar, 512, pod_size=256)["ops"][0]
+        assert o2["group"] == 2 and o2["cross_pod"]
+        # in-pod groups stay ICI
+        assert not ops["all-reduce"]["cross_pod"]
+        assert not ops["all-gather"]["cross_pod"]
+        assert out["dcn_bytes"] > 0 and out["ici_bytes"] > 0
+
+    def test_explicit_groups(self):
+        out = rl.parse_collectives(HLO, 512, pod_size=None)
+        ops = {o["op"]: o for o in out["ops"]}
+        assert ops["all-gather"]["group"] == 4
+
+
+class TestRoofline:
+    def test_terms_and_bound(self):
+        r = rl.Roofline(flops=197e12, bytes_accessed=819e9 * 2,
+                        ici_bytes=50e9 * 0.5, dcn_bytes=0.0,
+                        model_flops=98.5e12)
+        assert abs(r.t_compute - 1.0) < 1e-9
+        assert abs(r.t_memory - 2.0) < 1e-9
+        assert abs(r.t_collective - 0.5) < 1e-9
+        assert r.bound == "memory"
+        assert abs(r.t_step - 2.0) < 1e-9
+        assert abs(r.mfu - 0.25) < 1e-9
+        assert abs(r.flops_efficiency - 0.5) < 1e-9
+
+    def test_model_flops(self):
+        # 6ND train, 2ND inference
+        assert rl.model_flops_per_device(1e9, 1e6, 256, "train") == \
+            pytest.approx(6e15 / 256)
+        assert rl.model_flops_per_device(1e9, 128, 256, "inference") == \
+            pytest.approx(2 * 1e9 * 128 / 256)
+
+
+def test_memmodel_levers():
+    """The HBM model responds to its physical levers in the right direction."""
+    import jax
+    from repro.configs import get_config, LM_SHAPES
+    from repro.launch import memmodel
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    cfg = get_config("llama3_8b")
+    shape = LM_SHAPES["train_4k"]
+    base = memmodel.hbm_traffic(cfg, shape, FakeMesh(), n_micro=4)
+    fused = memmodel.hbm_traffic(cfg, shape, FakeMesh(), n_micro=4,
+                                 fused_attention=True)
+    assert fused["score_bytes"] == 0.0
+    assert fused["total_bytes"] < base["total_bytes"]
+    # decode: cache dominates
+    dec = memmodel.hbm_traffic(cfg, LM_SHAPES["decode_32k"], FakeMesh())
+    assert dec["cache_bytes"] > dec["activation_bytes"]
+    assert dec["grads_bytes"] == 0.0

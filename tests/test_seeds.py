@@ -1,0 +1,89 @@
+"""Paper §3: PWL seed segments, error bounds, iteration counts (Table I)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import seeds
+
+
+class TestPaperClaims:
+    def test_table_i_first_boundary_exact(self):
+        t = seeds.compute_segments(5, 53)
+        assert abs(t.boundaries[1] - 1.09811) < 5e-6
+
+    def test_table_i_eight_segments(self):
+        t = seeds.compute_segments(5, 53)
+        assert t.n_segments == 8
+        assert t.boundaries[-1] >= 2.0
+        # Later boundaries agree with the paper's Table I to ~0.3% (the paper
+        # used its as-printed eq.19/20; ours is the tighter eq.17 recurrence).
+        for ours, theirs in zip(t.boundaries[1:], seeds.PAPER_TABLE_I):
+            assert abs(ours - theirs) / theirs < 0.006
+
+    def test_single_segment_17_iterations(self):
+        # paper §3: linear seed on [1,2] needs <= 17 iterations for 53 bits
+        assert seeds.iterations_required(1.0, 2.0, 53) == 17
+
+    def test_two_segments_geometric_split(self):
+        # p = sqrt(ab) equalizes the two segments' error (paper §3).
+        n_left = seeds.iterations_required(1.0, math.sqrt(2.0), 53)
+        n_right = seeds.iterations_required(math.sqrt(2.0), 2.0, 53)
+        assert n_left == n_right  # equal-error split
+        # Paper claims 15; eq.17 actually gives 10 — a paper inconsistency we
+        # record (EXPERIMENTS.md §Paper-validation). Both < 17 (improvement).
+        assert n_left < 17
+
+    def test_f32_table(self):
+        t = seeds.compute_segments(2, 24)
+        assert t.max_error_bound() <= 2**-24
+
+
+class TestSeedMath:
+    def test_optimal_p_minimizes_total_error(self):
+        # E_total(p) from eq.14; optimum at p=(a+b)/2 (eq.15)
+        a, b = 1.0, 2.0
+        def e_total(p):
+            return (np.log(b / a) + (b**2 - a**2) / (2 * p**2)
+                    - 2 * (b - a) / p)
+        p_opt = (a + b) / 2
+        for p in [p_opt * 0.9, p_opt * 1.1, p_opt * 0.99, p_opt * 1.01]:
+            assert e_total(p_opt) <= e_total(p) + 1e-15
+
+    @given(st.floats(1.0, 1.9), st.floats(0.01, 0.5), st.integers(0, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_error_bound_holds(self, a, width, n):
+        """Eq. 17 is a true upper bound: measured series error <= bound."""
+        b = a + width
+        slope, intercept = seeds.linear_seed_coeffs(a, b)
+        xs = np.linspace(a, b, 500)
+        y0 = slope * xs + intercept
+        m = 1.0 - xs * y0
+        # series approx of 1/x: y0 * sum_{k<=n} m^k; exact error y0*m^(n+1)/(1-m)
+        acc = np.zeros_like(xs)
+        for k in range(n + 1):
+            acc += m**k
+        approx = y0 * acc
+        err = np.abs(1.0 / xs - approx)
+        bound = seeds.seed_error_bound(a, b, n)
+        # + ~9 ulp f64 slack: the bound is on exact arithmetic, the series
+        # evaluation itself rounds at a few 1e-16
+        assert np.all(err <= bound * (1 + 1e-6) + 1e-15)
+
+    @given(st.integers(1, 8), st.integers(8, 40))
+    @settings(max_examples=30, deadline=None)
+    def test_segments_meet_precision(self, n, prec):
+        t = seeds.compute_segments(n, prec)
+        assert t.max_error_bound() <= 2.0**-prec * (1 + 1e-9)
+        # segments tile [1,2] without gaps
+        assert t.boundaries[0] == 1.0
+        assert t.boundaries[-1] >= 2.0
+        assert np.all(np.diff(t.boundaries) > 0)
+
+    def test_rsqrt_table(self):
+        t = seeds.rsqrt_seed_table(16)
+        assert t.precision_bits >= 10  # seed good enough for 2 Newton steps
+        xs = np.linspace(0.5, 1.999, 1000)
+        y = t.seed(xs)
+        assert np.max(np.abs(y * np.sqrt(xs) - 1.0)) < 2.0**-t.precision_bits * 1.01

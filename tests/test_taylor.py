@@ -1,0 +1,105 @@
+"""Paper §2 + §6: Taylor-series reciprocal — oracle precision, schedules, edges."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import seeds, taylor
+
+
+class TestOracle53Bit:
+    """Validates the paper's headline claim: 8 segments + n=5 -> 53-bit recip."""
+
+    def test_paper_table_n5(self, rng):
+        t = seeds.compute_segments(5, 53)
+        x = rng.uniform(1.0, 2.0, 100_000)
+        r = taylor.reciprocal_np(x, t, schedule="paper")
+        # algorithmic error <= 2^-53; f64 evaluation adds <= ~4 ulp rounding
+        assert np.max(np.abs(r * x - 1.0)) < 2**-50
+
+    def test_error_tracks_eq17_bound_at_low_n(self, rng):
+        """Where the bound is far above f64 eps, measured error respects it
+        and is within 100x of it (the bound is not vacuous)."""
+        t = seeds.compute_segments(5, 53)
+        x = rng.uniform(1.0, 2.0, 100_000)
+        for n in (1, 2, 3):
+            r = taylor.reciprocal_np(x, t, n_iters=n, schedule="paper")
+            err = np.max(np.abs(r * x - 1.0))
+            bound = t.max_error_bound(n)
+            assert err <= bound * (1 + 1e-6)
+            assert err > bound / 100
+
+    def test_factored_at_least_as_accurate(self, rng):
+        t = seeds.compute_segments(5, 53)
+        x = rng.uniform(1.0, 2.0, 20_000)
+        for n in (1, 2, 3):
+            e_paper = np.max(np.abs(
+                taylor.reciprocal_np(x, t, n_iters=n, schedule="paper") * x - 1))
+            e_fact = np.max(np.abs(
+                taylor.reciprocal_np(x, t, n_iters=n, schedule="factored") * x - 1))
+            assert e_fact <= e_paper * (1 + 1e-9)
+
+    def test_full_range_with_exponents(self, rng):
+        t = seeds.compute_segments(5, 53)
+        x = rng.uniform(-1e30, 1e30, 50_000)
+        x = x[np.abs(x) > 1e-30]
+        r = taylor.reciprocal_np(x, t)
+        assert np.max(np.abs(r * x - 1.0)) < 2**-50
+
+    def test_divide(self, rng):
+        a = rng.normal(size=10_000) * 100
+        b = rng.uniform(0.5, 100, 10_000)
+        q = taylor.divide_np(a, b)
+        assert np.max(np.abs(q - a / b) / np.abs(a / b + 1e-30)) < 2**-49
+
+
+class TestJnpF32:
+    def test_f32_default_accuracy(self, rng):
+        x = jnp.asarray(rng.uniform(0.01, 1000, 50_000), jnp.float32)
+        r = jax.jit(taylor.reciprocal)(x)
+        rel = np.abs(np.asarray(r) * np.asarray(x) - 1.0)
+        assert rel.max() < 2**-21  # ~4 ulp of f32 + algorithmic 2^-24
+
+    def test_bf16(self, rng):
+        t = seeds.compute_segments(1, 10)
+        x = jnp.asarray(rng.uniform(0.1, 10, 4096), jnp.bfloat16)
+        r = taylor.reciprocal(x, t)
+        rel = np.abs(np.asarray(r, np.float32) * np.asarray(x, np.float32) - 1)
+        assert rel.max() < 0.02  # bf16 has 8 mantissa bits
+
+    def test_edges(self):
+        x = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -2.0],
+                        jnp.float32)
+        r = np.asarray(taylor.reciprocal(x))
+        assert np.isposinf(r[0]) and np.isneginf(r[1])
+        assert r[2] == 0.0 and r[3] == 0.0
+        assert np.signbit(r[3]) and not np.signbit(r[2])
+        assert np.isnan(r[4])
+        assert abs(r[5] - 1.0) < 1e-6 and abs(r[6] + 0.5) < 1e-6
+
+    def test_grad(self):
+        g = jax.grad(lambda v: taylor.reciprocal(v).sum())(jnp.float32(2.0))
+        assert abs(float(g) + 0.25) < 1e-5
+
+    def test_rsqrt(self, rng):
+        x = jnp.asarray(rng.uniform(1e-6, 1e6, 50_000), jnp.float32)
+        r = jax.jit(taylor.rsqrt)(x)
+        rel = np.abs(np.asarray(r) * np.sqrt(np.asarray(x)) - 1.0)
+        assert rel.max() < 1e-5
+
+    def test_rsqrt_oracle(self, rng):
+        x = rng.uniform(1e-8, 1e8, 50_000)
+        r = taylor.rsqrt_np(x, newton_iters=3)
+        assert np.max(np.abs(r * np.sqrt(x) - 1.0)) < 1e-11
+
+
+@given(st.floats(1e-20, 1e20), st.integers(1, 6),
+       st.sampled_from(["paper", "factored"]))
+@settings(max_examples=80, deadline=None)
+def test_property_recip_error_bound(x, n, schedule):
+    """For any normal x, n, schedule: |r*x - 1| <= table bound + f64 rounding."""
+    t = seeds.compute_segments(n, 53)
+    r = float(taylor.reciprocal_np(np.asarray([x]), t, schedule=schedule)[0])
+    assert abs(r * x - 1.0) <= t.max_error_bound() + 2**-48
