@@ -154,6 +154,22 @@ def bench_kernel_throughput():
     }
 
 
+def bench_ulp_accuracy():
+    """Conformance grid: delivered ULP accuracy per (mode x schedule x n x dtype).
+
+    The machine-readable twin is `python -m repro.eval.conformance --json`;
+    this row format keeps it greppable next to the perf numbers."""
+    from repro.eval import conformance
+
+    report = conformance.run_conformance(quick=True)
+    for c in report["cells"]:
+        o = c["overall"]
+        name = f"ulp_{c['op']}_{c['mode']}_{c['schedule']}_n{c['n_iters']}_{c['dtype']}"
+        print(f"{name},{c['seconds'] * 1e6:.0f},max_ulp={o['max_ulp']:.3f};"
+              f"mean_ulp={o['mean_ulp']:.4f};edge_fail={c['edge_failures']}")
+    RESULTS["ulp_accuracy"] = report
+
+
 def bench_e2e_softdiv():
     """End-to-end: smoke LM forward under exact vs taylor vs ilm division."""
     import dataclasses
@@ -192,6 +208,7 @@ BENCHES = {
     "ilm_accuracy": bench_ilm_accuracy,
     "powering_hw": bench_powering_hw,
     "kernel_throughput": bench_kernel_throughput,
+    "ulp_accuracy": bench_ulp_accuracy,
     "e2e_softdiv": bench_e2e_softdiv,
 }
 

@@ -12,6 +12,14 @@ the divider implementation is one config knob:
                         interpret mode; TPU gets real VMEM-tiled kernels.
   * ``ilm``           — bit-faithful emulation with 16-bit ILM mantissa
                         arithmetic (tests/benchmarks only; slow by design).
+  * ``goldschmidt``   — Goldschmidt N/D refinement (core/goldschmidt.py),
+                        sharing the paper's seed ROM; the canonical rival
+                        algorithm, kept on the same n_iters dial.
+  * ``goldschmidt_pallas`` — the same refinement fused into the Pallas
+                        division kernel (schedule="goldschmidt" in kernels/).
+
+The delivered accuracy of every mode is measured in ULPs by
+``repro.eval.conformance`` (``python -m repro.eval.conformance``).
 """
 from __future__ import annotations
 
@@ -20,12 +28,13 @@ from typing import Optional
 
 import numpy as np
 
-from . import taylor
+from . import goldschmidt, taylor
 from .seeds import compute_segments, rsqrt_seed_table
 
 __all__ = ["DivisionConfig", "recip", "div", "rsqrt", "softmax", "EXACT", "TAYLOR"]
 
-MODES = ("exact", "taylor", "taylor_pallas", "ilm")
+MODES = ("exact", "taylor", "taylor_pallas", "goldschmidt",
+         "goldschmidt_pallas", "ilm")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +60,11 @@ class DivisionConfig:
     def rtable(self):
         return rsqrt_seed_table(self.rsqrt_segments)
 
+    @property
+    def gs_iters(self) -> int:
+        """Goldschmidt iterations matching this n_iters' covered-term count."""
+        return goldschmidt.iters_for_terms(self.n_iters)
+
 
 EXACT = DivisionConfig(mode="exact")
 TAYLOR = DivisionConfig(mode="taylor")
@@ -66,8 +80,18 @@ def recip(x, cfg: DivisionConfig = TAYLOR):
 
             if kops.pallas_applicable(x):
                 return kops.tsdiv_recip(x, n_iters=cfg.n_iters,
-                                        precision_bits=cfg.precision_bits)
+                                        precision_bits=cfg.precision_bits,
+                                        schedule=cfg.schedule)
         return taylor.reciprocal(x, cfg.table, schedule=cfg.schedule)
+    if cfg.mode in ("goldschmidt", "goldschmidt_pallas"):
+        if cfg.mode == "goldschmidt_pallas":
+            from repro.kernels import ops as kops
+
+            if kops.pallas_applicable(x):
+                return kops.tsdiv_recip(x, n_iters=cfg.n_iters,
+                                        precision_bits=cfg.precision_bits,
+                                        schedule="goldschmidt")
+        return goldschmidt.reciprocal(x, cfg.table, iters=cfg.gs_iters)
     if cfg.mode == "ilm":
         return _recip_ilm_jnp(x, cfg)
     raise ValueError(cfg.mode)
@@ -76,6 +100,9 @@ def recip(x, cfg: DivisionConfig = TAYLOR):
 def div(a, b, cfg: DivisionConfig = TAYLOR):
     if cfg.mode == "exact":
         return a / b
+    if cfg.mode == "goldschmidt":
+        # Goldschmidt's hallmark: the numerator rides the F-multiplies.
+        return goldschmidt.divide(a, b, cfg.table, iters=cfg.gs_iters)
     return a * recip(b, cfg)
 
 
@@ -143,5 +170,10 @@ def _recip_ilm_jnp(x, cfg: DivisionConfig):
         acc = acc + powers[k]
     rman = fpmul(y0, acc)
     r = jnp.ldexp(rman, 1 - e) * jnp.sign(xf)
-    r = jnp.where(xf == 0, jnp.inf * jnp.sign(xf), r)
+    # Hardware edge semantics, same as every other mode: +-0 -> +-inf
+    # (inf * sign(0) would be nan), +-inf -> +-0, nan -> nan.
+    r = jnp.where(xf == 0, jnp.copysign(jnp.float32(np.inf), xf), r)
+    r = jnp.where(jnp.isinf(xf), jnp.copysign(jnp.float32(0.0), xf), r)
+    r = jnp.where(jnp.isnan(xf), jnp.float32(np.nan), r)
+    r = taylor.attach_grad(r, [(xf, -r * r)])
     return r.astype(x.dtype)

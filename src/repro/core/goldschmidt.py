@@ -1,0 +1,158 @@
+"""Goldschmidt division sharing the paper's PWL seed (the canonical rival).
+
+Goldschmidt's algorithm ("Implementation of Goldschmidt's Algorithm with
+hardware reduction", arXiv:1909.10154) refines numerator and denominator
+jointly:
+
+    F_k = 2 - D_k,   N_{k+1} = N_k * F_k,   D_{k+1} = D_k * F_k
+
+so D -> 1 quadratically and N -> a/b. It shares the seed + multiply structure
+of the paper's Taylor unit exactly: with y0 the PWL seed on the denominator
+mantissa and m = 1 - b*y0 the seed residual, D_k = 1 - m^(2^(k-1)) and
+F_k = 1 + m^(2^(k-1)) — Goldschmidt *is* the factored Taylor product
+prod (1 + m^(2^i)) evaluated by a self-correcting recurrence instead of
+explicit squarings. j iterations cover 2^j series terms.
+
+This implementation uses the residual-register ("hardware reduction") form:
+instead of materializing D and computing F = 2 - D (which truncates the
+residual to the bits representable next to 1), it keeps the residual r at its
+own exponent and fuses each F-multiply as N + N*r. The first residual comes
+from :func:`repro.core.taylor.exact_residual` (full-width seed product), so
+the f32 path lands within 1 ulp of the exact quotient. Seed tables are the
+paper's (:func:`repro.core.seeds.compute_segments`) — one ROM serves both
+algorithms.
+
+Twins as elsewhere in core/: ``*_np`` f64 numpy oracle, bare names jnp/f32.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .seeds import SeedTable, compute_segments
+from .taylor import exact_residual, seed_eval
+
+__all__ = [
+    "iters_for_terms", "reciprocal", "reciprocal_np", "divide", "divide_np",
+]
+
+
+def iters_for_terms(n_terms: int) -> int:
+    """Goldschmidt iterations covering >= n_terms+1 series terms (2^j >= n+1).
+
+    Puts mode="goldschmidt" on the same n_iters dial as the Taylor schedules:
+    DivisionConfig(n_iters=n) -> iters_for_terms(n) Goldschmidt iterations
+    match the factored schedule's covered-term count exactly.
+    """
+    return max(1, math.ceil(math.log2(n_terms + 1)))
+
+
+def _ldexp2(xp, x, k):
+    """ldexp for |k| up to ~2*emax: two steps so the internal 2^k factor
+    never overflows even when x * 2^k is representable."""
+    h = k // 2
+    return xp.ldexp(xp.ldexp(x, h), k - h)
+
+
+def _refine(num0, man_b, y0, iters: int, with_recip: bool = False):
+    """Joint refinement: N starts at num0*y0-ish, residual r = 1 - man_b*y0.
+
+    with_recip additionally rides a 1/man_b accumulator on the same residual
+    sequence (one extra FMA per iteration) — the divide path needs it for
+    the analytic gradient dq/db = -q/b. Pure operator arithmetic: serves
+    numpy, jnp, and the fused Pallas kernel body alike.
+    """
+    r = exact_residual(man_b, y0)
+    n = num0
+    y = y0
+    for _ in range(iters):
+        n = n + n * r       # N * F with F = 1 + r, low bits of r intact
+        if with_recip:
+            y = y + y * r
+        r = r * r           # next residual: 1 - D*F = r^2 exactly
+    return (n, y) if with_recip else n
+
+
+def _reciprocal_impl(xp, x, table: SeedTable, iters: int):
+    sign = xp.sign(x)
+    ax = xp.abs(x)
+    frac, e = xp.frexp(ax)          # ax = frac * 2^e, frac in [0.5, 1)
+    man = frac * 2.0                # in [1, 2)
+    y0 = seed_eval(xp, man, table)
+    rman = _refine(y0, man, y0, iters)          # in (0.5, 1]
+    r = xp.ldexp(rman, 1 - e) * sign
+    # Same hardware edge semantics as the Taylor unit.
+    r = xp.where(ax == 0, xp.copysign(xp.asarray(np.inf, r.dtype), x), r)
+    r = xp.where(xp.isinf(ax), xp.copysign(xp.asarray(0.0, r.dtype), x), r)
+    r = xp.where(xp.isnan(x), xp.asarray(np.nan, r.dtype), r)
+    return r
+
+
+def _divide_impl(xp, a, b, table: SeedTable, iters: int):
+    s = xp.copysign(xp.asarray(1.0, a.dtype), a) * xp.copysign(
+        xp.asarray(1.0, b.dtype), b)
+    aa, ab = xp.abs(a), xp.abs(b)
+    fa, ea = xp.frexp(aa)
+    fb, eb = xp.frexp(ab)
+    man_a, man_b = fa * 2.0, fb * 2.0               # [1, 2); 0 stays 0
+    y0 = seed_eval(xp, man_b, table)
+    q_man, rb_man = _refine(man_a * y0, man_b, y0, iters,
+                            with_recip=True)        # q_man in (0.5, 2)
+    rb = xp.ldexp(rb_man, 1 - eb) * xp.sign(b)      # ~1/b, for the VJP
+    q = _ldexp2(xp, q_man, ea - eb) * s             # ea-eb spans ~[-253, 253]
+    inf = xp.asarray(np.inf, q.dtype)
+    zero = xp.asarray(0.0, q.dtype)
+    nan = xp.asarray(np.nan, q.dtype)
+    q = xp.where((ab == 0) & (aa != 0), xp.copysign(inf, s), q)
+    q = xp.where(xp.isinf(aa) & ~xp.isinf(ab), xp.copysign(inf, s), q)
+    q = xp.where(xp.isinf(ab) & ~xp.isinf(aa), xp.copysign(zero, s), q)
+    q = xp.where((aa == 0) & (ab == 0), nan, q)
+    q = xp.where(xp.isinf(aa) & xp.isinf(ab), nan, q)
+    q = xp.where(xp.isnan(a) | xp.isnan(b), nan, q)
+    return q, rb
+
+
+# ---------------------------------------------------------------- numpy oracle
+
+def reciprocal_np(x, table: SeedTable | None = None, *, iters: int = 2) -> np.ndarray:
+    table = table or compute_segments(5, 53)
+    return _reciprocal_impl(np, np.asarray(x, np.float64), table, iters)
+
+
+def divide_np(a, b, table: SeedTable | None = None, *, iters: int = 2) -> np.ndarray:
+    table = table or compute_segments(5, 53)
+    q, _ = _divide_impl(np, np.asarray(a, np.float64),
+                        np.asarray(b, np.float64), table, iters)
+    return q
+
+
+# ------------------------------------------------------------------- jnp path
+
+def reciprocal(x, table: SeedTable | None = None, *, iters: int = 2):
+    """Goldschmidt reciprocal in JAX. f32 compute; bf16/f16 pass through f32."""
+    import jax.numpy as jnp
+
+    from .taylor import attach_grad
+
+    table = table or compute_segments(2, 24)
+    out_dtype = x.dtype
+    xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
+    r = _reciprocal_impl(jnp, xf, table, iters)
+    r = attach_grad(r, [(xf, -r * r)])
+    return r.astype(out_dtype)
+
+
+def divide(a, b, table: SeedTable | None = None, *, iters: int = 2):
+    """Goldschmidt a/b with joint N/D refinement (not a*recip(b))."""
+    import jax.numpy as jnp
+
+    from .taylor import attach_grad
+
+    table = table or compute_segments(2, 24)
+    out_dtype = a.dtype
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    q, rb = _divide_impl(jnp, af, bf, table, iters)
+    q = attach_grad(q, [(af, rb), (bf, -q * rb)])   # dq = rb*da - q*rb*db
+    return q.astype(out_dtype)

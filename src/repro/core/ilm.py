@@ -51,16 +51,19 @@ def ilm_mul_np(a, b, iters: int) -> np.ndarray:
     a = np.asarray(a, np.uint64)
     b = np.asarray(b, np.uint64)
     acc = np.zeros(np.broadcast(a, b).shape, np.uint64)
-    for _ in range(iters):
-        valid = (a > 0) & (b > 0)
-        k1 = floor_log2_np(np.maximum(a, 1)).astype(np.uint64)
-        k2 = floor_log2_np(np.maximum(b, 1)).astype(np.uint64)
-        ra = a - (np.uint64(1) << k1)          # LOD residue: N1 - 2^k1
-        rb = b - (np.uint64(1) << k2)
-        p = (np.uint64(1) << (k1 + k2)) + (ra << k2) + (rb << k1)
-        acc = np.where(valid, acc + p, acc)
-        a = np.where(valid, ra, a)
-        b = np.where(valid, rb, b)
+    # uint64 wraparound on np.where-discarded lanes is expected; the kept
+    # lanes fit 48 bits (24-bit operands) and are exact.
+    with np.errstate(over="ignore"):
+        for _ in range(iters):
+            valid = (a > 0) & (b > 0)
+            k1 = floor_log2_np(np.maximum(a, 1)).astype(np.uint64)
+            k2 = floor_log2_np(np.maximum(b, 1)).astype(np.uint64)
+            ra = a - (np.uint64(1) << k1)      # LOD residue: N1 - 2^k1
+            rb = b - (np.uint64(1) << k2)
+            p = (np.uint64(1) << (k1 + k2)) + (ra << k2) + (rb << k1)
+            acc = np.where(valid, acc + p, acc)
+            a = np.where(valid, ra, a)
+            b = np.where(valid, rb, b)
     return acc
 
 

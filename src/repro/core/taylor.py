@@ -29,7 +29,8 @@ from . import powering
 
 __all__ = [
     "reciprocal", "reciprocal_np", "divide", "divide_np", "rsqrt", "rsqrt_np",
-    "default_table",
+    "default_table", "exact_residual", "series_sum", "seed_eval",
+    "attach_grad",
 ]
 
 
@@ -38,40 +39,77 @@ def default_table(precision_bits: int = 24, n_iters: int = 2) -> SeedTable:
     return compute_segments(n_iters, precision_bits)
 
 
-def _series_acc(xp, m, n: int, schedule: str):
-    """sum_{k=0}^{n'} m^k with n' >= n, per the requested schedule."""
-    one = xp.ones_like(m)
+def exact_residual(man, y0):
+    """m = 1 - man*y0 at full product width (Dekker two-product).
+
+    The hardware unit subtracts the seed multiplier's *untruncated* 2p-bit
+    output from 1, so the residual that drives the series carries no rounding.
+    Emulating in p-bit float needs an error-free transform: Veltkamp-split
+    both operands, recover the rounding error e of the p-bit product, and
+    fold it into the (Sterbenz-exact) subtraction. Works under FMA
+    contraction too — a contracted ``hi*hi - p`` is the exact error term.
+    Pure operator arithmetic, so one body serves numpy and jnp (no xp
+    parameter, unlike its siblings).
+    """
+    p = man * y0
+    # Split factor 2^ceil(prec/2) + 1: f32 -> 4097, f64 -> 2^27 + 1.
+    prec = np.finfo(np.dtype(man.dtype)).nmant + 1
+    c = float(2 ** ((prec + 1) // 2) + 1)
+    tm = c * man
+    mh = tm - (tm - man)
+    ml = man - mh
+    ty = c * y0
+    yh = ty - (ty - y0)
+    yl = y0 - yh
+    e = ((mh * yh - p) + mh * yl + ml * yh) + ml * yl   # man*y0 == p + e exactly
+    return (1.0 - p) - e
+
+
+def series_sum(xp, m, n: int, schedule: str):
+    """s = sum_{k=1}^{n'} m^k with n' >= n, per the requested schedule.
+
+    Returned *without* the leading 1 so callers can form y0 + y0*s — adding 1
+    to a ~2^-p/(n+1) sized sum would truncate its low bits before the final
+    multiply and cost ~1 ulp of the result.
+    """
     if n <= 0:
-        return one
+        return xp.zeros_like(m)
     if schedule == "factored":
         j = max(1, math.ceil(math.log2(n + 1)))
-        acc = one + m
+        s = m
         t = m * m
         for _ in range(j - 1):
-            acc = acc * (one + t)
+            s = s + t * (1.0 + s)     # (1+s)(1+t) = 1 + (s + t*(1+s))
             t = t * t
-        return acc
+        return s
     if schedule == "paper":
         powers = powering.eval_powers(m, n, mul=lambda a, b: a * b, square=lambda a: a * a)
-        acc = one + m if n >= 1 else one
+        s = m
         for k in range(2, n + 1):
-            acc = acc + powers[k]
-        return acc
+            s = s + powers[k]
+        return s
     raise ValueError(f"unknown schedule {schedule!r}")
 
 
-def _reciprocal_mantissa(xp, man, table: SeedTable, n: int, schedule: str):
-    """1/man for man in [1, 2): PWL seed + Taylor refinement. No edge cases."""
+def seed_eval(xp, man, table: SeedTable):
+    """PWL seed y0(man): compare-sum segment lookup + per-segment FMA.
+
+    Shared by the Taylor and Goldschmidt paths (one seed ROM, two
+    refinement algorithms)."""
     inner = table.inner_boundaries.astype(man.dtype)
     slopes = table.slopes.astype(man.dtype)
     intercepts = table.intercepts.astype(man.dtype)
     if len(inner):
         idx = xp.sum((man[..., None] >= inner).astype(np.int32), axis=-1)
-        y0 = xp.take(slopes, idx) * man + xp.take(intercepts, idx)
-    else:
-        y0 = slopes[0] * man + intercepts[0]
-    m = 1.0 - man * y0
-    return y0 * _series_acc(xp, m, n, schedule)
+        return xp.take(slopes, idx) * man + xp.take(intercepts, idx)
+    return slopes[0] * man + intercepts[0]
+
+
+def _reciprocal_mantissa(xp, man, table: SeedTable, n: int, schedule: str):
+    """1/man for man in [1, 2): PWL seed + Taylor refinement. No edge cases."""
+    y0 = seed_eval(xp, man, table)
+    m = exact_residual(man, y0)
+    return y0 + y0 * series_sum(xp, m, n, schedule)
 
 
 def _reciprocal_impl(xp, x, table: SeedTable, n: int, schedule: str):
@@ -111,6 +149,34 @@ def rsqrt_np(x, table: SeedTable | None = None, *, newton_iters: int = 3) -> np.
 
 # ------------------------------------------------------------------- jnp path
 
+def attach_grad(r, pairs):
+    """Analytic first-order gradient for the bit-level datapath.
+
+    frexp/ldexp/bitcast carry zero cotangent in XLA, so the forward value is
+    right but autodiff through the unit silently returns 0. Straight-through
+    fix with g_i = dr/dx_i supplied analytically:
+
+        out = r - (stop_grad(corr) - corr),  corr = sum_i g_i*(x_i - sg(x_i))
+
+    corr's *value* is a finite +-0 on every lane (g and x-sg(x) are masked
+    finite), so sg(corr) - corr is exactly +0 and subtracting it preserves
+    the primal bit-for-bit — signed zeros, infs and nans included — while
+    the gradient of the expression is d(corr). Lanes whose analytic g is
+    inf/nan (edge results) get zero gradient instead of nan poison.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rs = jax.lax.stop_gradient(r)
+    corr = None
+    for x, g in pairs:
+        g = jnp.where(jnp.isfinite(g), g, 0.0)
+        dx = jnp.where(jnp.isfinite(x), x - jax.lax.stop_gradient(x), 0.0)
+        term = jax.lax.stop_gradient(g) * dx
+        corr = term if corr is None else corr + term
+    return rs - (jax.lax.stop_gradient(corr) - corr)
+
+
 def reciprocal(x, table: SeedTable | None = None, *, n_iters: int | None = None,
                schedule: str = "factored"):
     """Taylor-series reciprocal in JAX. f32 compute; bf16/f16 pass through f32."""
@@ -121,6 +187,7 @@ def reciprocal(x, table: SeedTable | None = None, *, n_iters: int | None = None,
     out_dtype = x.dtype
     xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
     r = _reciprocal_impl(jnp, xf, table, n, schedule)
+    r = attach_grad(r, [(xf, -r * r)])          # d(1/x) = -r^2 dx
     return r.astype(out_dtype)
 
 
@@ -141,9 +208,11 @@ def _rsqrt_impl(xp, x, table: SeedTable, newton_iters: int):
     for _ in range(newton_iters):
         y = y * (1.5 - 0.5 * u * y * y)
     r = xp.ldexp(y, -s)
-    r = xp.where(x == 0, xp.asarray(np.inf, r.dtype), r)
+    # IEEE edges (matches jax.lax.rsqrt): +-0 -> +-inf, +inf -> +0,
+    # x < 0 (incl. -inf) -> nan, nan -> nan.
+    r = xp.where(x == 0, xp.copysign(xp.asarray(np.inf, r.dtype), x), r)
+    r = xp.where(xp.isinf(x) & (x > 0), xp.asarray(0.0, r.dtype), r)
     r = xp.where(x < 0, xp.asarray(np.nan, r.dtype), r)
-    r = xp.where(xp.isinf(x), xp.asarray(0.0, r.dtype), r)
     r = xp.where(xp.isnan(x), xp.asarray(np.nan, r.dtype), r)
     return r
 
@@ -155,4 +224,5 @@ def rsqrt(x, table: SeedTable | None = None, *, newton_iters: int = 2):
     out_dtype = x.dtype
     xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
     r = _rsqrt_impl(jnp, xf, table, newton_iters)
+    r = attach_grad(r, [(xf, -0.5 * r * r * r)])    # d(x^-1/2) = -r^3/2 dx
     return r.astype(out_dtype)

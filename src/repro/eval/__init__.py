@@ -1,0 +1,9 @@
+"""Division-accuracy conformance subsystem.
+
+  * ``ulp``         — exact ULP distance vs the f64 oracle + stratified sweeps
+  * ``golden``      — committed golden-vector store (regressions fail loudly)
+  * ``conformance`` — (mode x schedule x n_iters x dtype) grid runner
+
+Entry point: ``PYTHONPATH=src python -m repro.eval.conformance``.
+"""
+from . import ulp  # noqa: F401

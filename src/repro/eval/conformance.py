@@ -1,0 +1,231 @@
+"""Conformance runner: delivered ULP accuracy over (mode x schedule x n_iters x dtype).
+
+Sweeps every cell of the division-mode grid against the f64 oracle on the
+stratified operand corpus (eval/ulp.py) and emits a machine-readable report:
+
+    PYTHONPATH=src python -m repro.eval.conformance            # full grid
+    PYTHONPATH=src python -m repro.eval.conformance --quick    # CI-sized
+    PYTHONPATH=src python -m repro.eval.conformance --json out.json
+
+The five algorithm families on identical footing: exact (XLA), Taylor with
+the paper's §6 schedule, Taylor factored, Goldschmidt (core/goldschmidt.py,
+plus its fused-kernel twin), and the 16-bit ILM emulation. Consumed by
+tests/test_conformance.py (the paper's eq. 17 precision claim as a hard
+gate) and benchmarks/run.py (bench_ulp_accuracy).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.division_modes import DivisionConfig, div, recip
+from repro.core.seeds import compute_segments
+from . import ulp
+
+__all__ = ["Cell", "default_grid", "run_cell", "run_conformance",
+           "format_table", "main"]
+
+# (n_iters, precision_bits) operating points: the paper's accuracy dial.
+DIAL = ((1, 12), (2, 24), (3, 30))
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One conformance grid cell. schedule '-' = not applicable to the mode."""
+
+    mode: str
+    schedule: str = "-"
+    n_iters: int = 2
+    precision_bits: int = 24
+    dtype: str = "float32"
+    op: str = "recip"
+
+    @property
+    def key(self) -> str:
+        return f"{self.op}/{self.mode}/{self.schedule}/n{self.n_iters}" \
+               f"p{self.precision_bits}/{self.dtype}"
+
+    def config(self) -> DivisionConfig:
+        sched = self.schedule if self.schedule != "-" else "factored"
+        return DivisionConfig(mode=self.mode, n_iters=self.n_iters,
+                              precision_bits=self.precision_bits,
+                              schedule=sched)
+
+
+def default_grid(dtypes: Sequence[str] = ulp.DTYPES,
+                 dial: Sequence = DIAL, quick: bool = False) -> List[Cell]:
+    """Every (mode x schedule x n_iters x dtype) cell, plus div spot-checks."""
+    if quick:
+        dial = [d for d in dial if d == (2, 24)] or [dial[0]]
+    cells: List[Cell] = []
+    for dt in dtypes:
+        cells.append(Cell("exact", dtype=dt))
+        for n, p in dial:
+            for sched in ("paper", "factored"):
+                cells.append(Cell("taylor", sched, n, p, dt))
+            cells.append(Cell("taylor_pallas", "factored", n, p, dt))
+            cells.append(Cell("goldschmidt", "-", n, p, dt))
+            cells.append(Cell("goldschmidt_pallas", "-", n, p, dt))
+        # ILM carries ~12 mantissa bits by construction — one cell suffices.
+        cells.append(Cell("ilm", "-", 2, 24, dt))
+        # Divide spot-checks at the default operating point.
+        for mode in ("exact", "taylor", "goldschmidt"):
+            cells.append(Cell(mode, "factored" if mode == "taylor" else "-",
+                              2, 24, dt, op="div"))
+    return cells
+
+
+def _edge_failures(x64: np.ndarray, r64: np.ndarray) -> int:
+    """IEEE contract on the edge corpus: +-0 -> +-inf, +-inf -> +-0, nan -> nan."""
+    fails = 0
+    zero = x64 == 0
+    fails += int(np.sum(zero & ~(np.isinf(r64)
+                                 & (np.signbit(r64) == np.signbit(x64)))))
+    inf = np.isinf(x64)
+    fails += int(np.sum(inf & ~((r64 == 0)
+                                & (np.signbit(r64) == np.signbit(x64)))))
+    nan = np.isnan(x64)
+    fails += int(np.sum(nan & ~np.isnan(r64)))
+    return fails
+
+
+def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
+             seed: int = 0) -> Dict:
+    """Measure one cell over the stratified sweep; returns a report dict."""
+    import jax.numpy as jnp
+
+    cfg = cell.config()
+    table = compute_segments(cell.n_iters, cell.precision_bits)
+    strata = ulp.stratified_sweep(cell.dtype, n_log=n_log, n_man=n_man,
+                                  boundaries=table.boundaries, seed=seed)
+    t0 = time.perf_counter()
+    per_stratum: Dict[str, Dict] = {}
+    edge_fail = 0
+    agg: List[np.ndarray] = []
+    for name, xs in strata.items():
+        x64 = np.asarray(xs).astype(np.float64)
+        xj = jnp.asarray(xs)
+        if cell.op == "div":
+            # Pair each denominator with a deterministic numerator sweep.
+            a64 = np.asarray(
+                ulp.sweep_logspace(x64.size, cell.dtype, seed + 7),
+                np.float64)[:x64.size]
+            aj = jnp.asarray(a64.astype(np.asarray(xs).dtype))
+            r = div(aj, xj, cfg)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                exact = a64 / x64
+        else:
+            r = recip(xj, cfg)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                exact = 1.0 / x64          # IEEE: +-0 -> +-inf, +-inf -> +-0
+        r_np = np.asarray(r)
+        # ULP stats are defined where the exact result is a normal number AND
+        # every operand is normal: XLA (like the hardware unit) flushes
+        # subnormal operands to zero, so those lanes are an FTZ edge class.
+        mask = ulp.oracle_mask(exact, cell.dtype) & ulp.oracle_mask(x64, cell.dtype)
+        if cell.op == "div":
+            mask &= ulp.oracle_mask(a64, cell.dtype)
+        errs = ulp.ulp_error(r_np, exact, cell.dtype, where=mask)
+        per_stratum[name] = ulp.summarize(errs, mask)
+        if name == "subnormals":
+            per_stratum[name]["ftz_frac"] = float(
+                np.mean(np.isinf(r_np.astype(np.float64))))
+        if name == "edges" and cell.op == "recip":
+            edge_fail = _edge_failures(x64, r_np.astype(np.float64))
+        agg.append(errs[mask])
+    allv = np.concatenate(agg) if agg else np.zeros(0)
+    out = dataclasses.asdict(cell)
+    out.update({
+        "key": cell.key,
+        "overall": ulp.summarize(allv),
+        "strata": per_stratum,
+        "edge_failures": edge_fail,
+        "seconds": round(time.perf_counter() - t0, 3),
+    })
+    return out
+
+
+def run_conformance(cells: Optional[Sequence[Cell]] = None, *,
+                    n_log: int = 4096, n_man: int = 4096,
+                    quick: bool = False, seed: int = 0) -> Dict:
+    """Run the grid; returns {meta, cells: [...]}, JSON-serializable."""
+    import jax
+
+    if cells is None:
+        cells = default_grid(quick=quick)
+    if quick:
+        n_log, n_man = min(n_log, 1024), min(n_man, 1024)
+    report = {
+        "meta": {
+            "jax": jax.__version__,
+            "numpy": np.__version__,
+            "backend": jax.default_backend(),
+            "sweep": {"n_log": n_log, "n_man": n_man, "seed": seed},
+        },
+        "cells": [run_cell(c, n_log=n_log, n_man=n_man, seed=seed)
+                  for c in cells],
+    }
+    return report
+
+
+def cell_lookup(report: Dict, **kw) -> Dict:
+    """First report cell matching all given field values (mode=, dtype=, ...)."""
+    for c in report["cells"]:
+        if all(c.get(k) == v for k, v in kw.items()):
+            return c
+    raise KeyError(f"no cell matching {kw}")
+
+
+def format_table(report: Dict) -> str:
+    """Human-readable mode x schedule x n_iters ULP table."""
+    hdr = (f"{'op':5s} {'mode':18s} {'schedule':10s} {'n':>2s} {'bits':>4s} "
+           f"{'dtype':9s} {'max_ulp':>10s} {'mean_ulp':>10s} {'p99':>8s} "
+           f"{'edges':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in report["cells"]:
+        o = c["overall"]
+        lines.append(
+            f"{c['op']:5s} {c['mode']:18s} {c['schedule']:10s} "
+            f"{c['n_iters']:2d} {c['precision_bits']:4d} {c['dtype']:9s} "
+            f"{o['max_ulp']:10.3f} {o['mean_ulp']:10.4f} {o['p99_ulp']:8.3f} "
+            f"{'ok' if c['edge_failures'] == 0 else c['edge_failures']:>5}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized sweep (1024-point strata, n=2 dial only)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable report here")
+    ap.add_argument("--modes", default=None,
+                    help="comma-separated mode filter (e.g. taylor,goldschmidt)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cells = default_grid(quick=args.quick)
+    if args.modes:
+        from repro.core.division_modes import MODES
+
+        keep = set(args.modes.split(","))
+        unknown = keep - set(MODES)
+        if unknown:
+            ap.error(f"unknown modes {sorted(unknown)}; valid: {MODES}")
+        cells = [c for c in cells if c.mode in keep]
+    report = run_conformance(cells, quick=args.quick, seed=args.seed)
+    print(format_table(report))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,152 @@
+"""Golden-vector store: committed bit-exact outputs, regressions fail loudly.
+
+A small deterministic operand corpus is pushed through a fixed set of
+division-mode cells; the resulting f32 *bit patterns* are committed as an
+``.npz`` next to this module. ``check()`` recomputes and compares in integer
+ULPs (default tolerance 0 — any numerics change must be deliberate and
+regenerate the vectors):
+
+    PYTHONPATH=src python -m repro.eval.golden --check
+    PYTHONPATH=src python -m repro.eval.golden --generate   # after a deliberate change
+
+tests/test_conformance.py runs the check in tier-1, so an accidental change
+to seeds, schedules, the compensated residual, or the kernels shows up as a
+named cell with its ULP drift — not as a silent accuracy loss.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import ulp
+
+__all__ = ["GOLDEN_PATH", "golden_cells", "golden_inputs", "generate", "check"]
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "reciprocal_v1.npz"
+
+
+def golden_cells() -> List[Tuple[str, Dict]]:
+    """(key, kwargs-for-DivisionConfig + op) pairs covered by the store."""
+    cells = [
+        ("recip/taylor/paper/n2p24",
+         dict(mode="taylor", schedule="paper", n_iters=2, precision_bits=24)),
+        ("recip/taylor/factored/n2p24",
+         dict(mode="taylor", schedule="factored", n_iters=2, precision_bits=24)),
+        ("recip/taylor/factored/n1p12",
+         dict(mode="taylor", schedule="factored", n_iters=1, precision_bits=12)),
+        ("recip/taylor_pallas/factored/n2p24",
+         dict(mode="taylor_pallas", schedule="factored", n_iters=2,
+              precision_bits=24)),
+        ("recip/goldschmidt/n2p24",
+         dict(mode="goldschmidt", n_iters=2, precision_bits=24)),
+        ("recip/goldschmidt_pallas/n2p24",
+         dict(mode="goldschmidt_pallas", n_iters=2, precision_bits=24)),
+        ("recip/ilm/n2p24", dict(mode="ilm", n_iters=2, precision_bits=24)),
+        ("div/goldschmidt/n2p24",
+         dict(mode="goldschmidt", n_iters=2, precision_bits=24)),
+    ]
+    return cells
+
+
+def golden_inputs() -> np.ndarray:
+    """Deterministic f32 corpus: logspace + mantissa-dense + IEEE edges."""
+    parts = [
+        ulp.sweep_logspace(256, "float32", seed=101),
+        ulp.sweep_mantissa(96, "float32", seed=102),   # grid+jitter -> 192
+        ulp.sweep_edges("float32"),
+        ulp.sweep_subnormals(32, "float32", seed=103),
+    ]
+    return np.concatenate(parts).astype(np.float32)
+
+
+def golden_numerators(n: int) -> np.ndarray:
+    """Deterministic numerator sweep for the div cells (committed alongside
+    inputs — RNG streams are not stable across numpy releases)."""
+    return ulp.sweep_logspace(n, "float32", seed=104)
+
+
+def _compute(key: str, kw: Dict, x: np.ndarray, a: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.core.division_modes import DivisionConfig, div, recip
+
+    cfg = DivisionConfig(**kw)
+    xj = jnp.asarray(x)
+    if key.startswith("div/"):
+        out = div(jnp.asarray(a), xj, cfg)
+    else:
+        out = recip(xj, cfg)
+    return np.asarray(out, np.float32)
+
+
+def generate(path: Path = GOLDEN_PATH) -> Path:
+    """Recompute every cell and (over)write the committed vectors."""
+    import jax
+
+    x = golden_inputs()
+    a = golden_numerators(x.size)
+    arrays = {"inputs": x, "numerators": a}
+    for key, kw in golden_cells():
+        arrays["out:" + key] = _compute(key, kw, x, a).view(np.uint32)
+    arrays["meta"] = np.frombuffer(json.dumps({
+        "version": 1, "jax": jax.__version__, "numpy": np.__version__,
+    }).encode(), np.uint8)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(path, **arrays)
+    return path
+
+
+def check(path: Path = GOLDEN_PATH, tolerance_ulp: int = 0) -> List[Dict]:
+    """Recompute and diff against the store. Returns failures (empty = pass)."""
+    with np.load(path) as z:
+        x = z["inputs"]
+        a = z["numerators"] if "numerators" in z.files else golden_numerators(x.size)
+        stored = {k[len("out:"):]: z[k] for k in z.files if k.startswith("out:")}
+    failures: List[Dict] = []
+    for key, kw in golden_cells():
+        if key not in stored:
+            failures.append({"cell": key, "error": "missing from store"})
+            continue
+        want = stored[key].view(np.float32)
+        got = _compute(key, kw, x, a)
+        d = ulp.ulp_diff(got, want)
+        bad = d > tolerance_ulp
+        if bad.any():
+            failures.append({
+                "cell": key,
+                "n_mismatch": int(bad.sum()),
+                "max_ulp_drift": int(d.max()),
+                "first_input": float(x[np.argmax(d)]),
+            })
+    return failures
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--generate", action="store_true")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--path", type=Path, default=GOLDEN_PATH)
+    ap.add_argument("--tolerance-ulp", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.generate:
+        p = generate(args.path)
+        print(f"wrote {p} ({p.stat().st_size} bytes, "
+              f"{len(golden_cells())} cells x {golden_inputs().size} points)")
+        return 0
+    failures = check(args.path, args.tolerance_ulp)
+    if failures:
+        print("GOLDEN-VECTOR REGRESSION:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"golden vectors ok ({len(golden_cells())} cells, {args.path})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,228 @@
+"""ULP-error engine: exact ULP distance vs the f64 oracle, stratified sweeps.
+
+The paper's programmable-accuracy claim (eq. 17) ties (n_iters, seed
+precision) to delivered output bits; this module is the measuring stick.
+Everything is plain numpy on host — results coming out of jax are converted
+first, so the engine has no opinion about how the values were produced.
+
+Two distances, for two jobs:
+
+  * :func:`ulp_error` — fractional ULPs between a finite-precision result and
+    the *exact* (f64 oracle) value, measured in ULPs of the result dtype at
+    the oracle's magnitude. This is the conformance number ("max 0.5 ulp").
+  * :func:`ulp_diff` — integer ULP steps between two same-dtype arrays via
+    the monotone ordered-integer map. This is the golden-vector / A-vs-B
+    number ("goldschmidt is within 1 ulp of factored-taylor").
+
+Sweeps are stratified because uniform sampling never sees the hard cases:
+``logspace`` covers the full exponent range, ``mantissa`` is dense in [1, 2)
+(where the PWL segments live), ``boundaries`` straddles the seed-table
+segment edges by a few ULPs, and ``edges`` is the IEEE corpus (signed zeros,
+infs, nan, subnormals, extremes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping
+
+import numpy as np
+
+__all__ = [
+    "DTYPES", "ulp_size", "to_ordered", "ulp_diff", "ulp_error",
+    "oracle_mask", "sweep_logspace", "sweep_mantissa", "sweep_boundaries",
+    "sweep_edges", "sweep_subnormals", "stratified_sweep", "summarize",
+]
+
+
+def _resolve_dtype(dtype):
+    """Accept 'bfloat16' / np.float32 / jnp dtypes; return a numpy dtype."""
+    if isinstance(dtype, str) and dtype == "bfloat16":
+        import ml_dtypes
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(dtype)
+
+
+DTYPES = ("float32", "bfloat16")
+
+# (mantissa bits incl. hidden, min normal exponent, max exponent) per format.
+_FORMAT = {
+    "float16": (11, -14, 15),
+    "bfloat16": (8, -126, 127),
+    "float32": (24, -126, 127),
+    "float64": (53, -1022, 1023),
+}
+
+
+def _fmt(dtype):
+    dt = _resolve_dtype(dtype)
+    return _FORMAT[dt.name]
+
+
+def ulp_size(exact: np.ndarray, dtype="float32") -> np.ndarray:
+    """ULP of ``dtype`` at the magnitude of ``exact`` (f64), as f64.
+
+    ulp(y) = 2^(max(floor(log2|y|), emin) - (p-1)); the emin clamp makes the
+    subnormal range share the smallest-normal ULP (fixed-point spacing).
+    """
+    p, emin, _ = _fmt(dtype)
+    x = np.abs(np.asarray(exact, np.float64))
+    frac, e = np.frexp(x)                      # x = frac * 2^e, frac in [0.5,1)
+    e = np.where(x == 0, emin + 1, e)          # avoid log of 0; clamped below
+    return np.ldexp(1.0, np.maximum(e - 1, emin) - (p - 1))
+
+
+def to_ordered(x: np.ndarray) -> np.ndarray:
+    """Monotone map of IEEE floats to int64 (adjacent floats differ by 1).
+
+    +0 and -0 both map to 0; works for any IEEE format (f16/bf16/f32/f64)
+    by viewing the underlying bits.
+    """
+    x = np.asarray(x)
+    int_t = {2: np.int16, 4: np.int32, 8: np.int64}[x.dtype.itemsize]
+    bits = x.view(int_t).astype(np.int64)
+    mag_mask = np.int64((1 << (x.dtype.itemsize * 8 - 1)) - 1)
+    return np.where(bits < 0, -(bits & mag_mask), bits)
+
+
+def ulp_diff(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Integer ULP steps between same-dtype arrays; nan-vs-nan counts as 0."""
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype != b.dtype:
+        raise ValueError(f"dtype mismatch: {a.dtype} vs {b.dtype}")
+    d = np.abs(to_ordered(a) - to_ordered(b))
+    both_nan = np.isnan(a.astype(np.float64)) & np.isnan(b.astype(np.float64))
+    return np.where(both_nan, 0, d)
+
+
+def oracle_mask(exact: np.ndarray, dtype="float32") -> np.ndarray:
+    """Inputs whose exact result is a *normal* finite number in ``dtype``.
+
+    ULP statistics are only well-defined there: results that overflow,
+    underflow to subnormal/zero, or are inf/nan get their own edge checks
+    (hardware units FTZ in that range, by design — see kernels/common.py).
+    """
+    p, emin, emax = _fmt(dtype)
+    ax = np.abs(np.asarray(exact, np.float64))
+    tiny = np.ldexp(1.0, emin)
+    # Largest finite: (2 - 2^(1-p)) * 2^emax.
+    big = np.ldexp(2.0 - 2.0 ** (1 - p), emax)
+    return np.isfinite(ax) & (ax >= tiny) & (ax <= big)
+
+
+def ulp_error(approx: np.ndarray, exact: np.ndarray, dtype="float32",
+              where: np.ndarray | None = None) -> np.ndarray:
+    """|approx - exact| in ULPs of ``dtype``, elementwise (f64).
+
+    ``approx`` is the finite-precision result (any float dtype), ``exact``
+    the f64 oracle. Masked-out lanes (see oracle_mask) return 0.
+    """
+    approx64 = np.asarray(approx).astype(np.float64)
+    exact64 = np.asarray(exact, np.float64)
+    mask = oracle_mask(exact64, dtype) if where is None else where
+    with np.errstate(invalid="ignore"):   # inf-inf on masked-out lanes
+        err = np.where(mask, np.abs(approx64 - exact64), 0.0)
+    return err / ulp_size(exact64, dtype)
+
+
+# ------------------------------------------------------------------- sweeps
+
+def sweep_logspace(n: int = 4096, dtype="float32", seed: int = 0) -> np.ndarray:
+    """Signed log-uniform sweep over the full normal exponent range."""
+    p, emin, emax = _fmt(dtype)
+    rng = np.random.default_rng(seed)
+    e = rng.uniform(emin, emax, n)
+    s = rng.choice([-1.0, 1.0], n)
+    x = s * np.exp2(e)
+    return x.astype(_resolve_dtype(dtype))
+
+
+def sweep_mantissa(n: int = 4096, dtype="float32", seed: int = 1) -> np.ndarray:
+    """Dense coverage of [1, 2): grid + jitter, where the PWL segments live."""
+    rng = np.random.default_rng(seed)
+    grid = 1.0 + np.arange(n) / n
+    jit = 1.0 + rng.random(n)
+    return np.concatenate([grid, jit]).astype(_resolve_dtype(dtype))
+
+
+def sweep_boundaries(boundaries: Iterable[float], dtype="float32",
+                     ulps: int = 4) -> np.ndarray:
+    """Points straddling each seed-segment boundary by -ulps..+ulps steps."""
+    dt = _resolve_dtype(dtype)
+    base = np.asarray(list(boundaries), np.float64).astype(dt)
+    out = [base]
+    lo = np.full_like(base, -np.inf, dtype=dt)
+    hi = np.full_like(base, np.inf, dtype=dt)
+    up, dn = base, base
+    for _ in range(ulps):
+        # nextafter is not implemented for bf16 — step via the ordered map.
+        up = _nextafter(up, hi)
+        dn = _nextafter(dn, lo)
+        out += [up.copy(), dn.copy()]
+    return np.concatenate(out)
+
+
+def _nextafter(x, towards):
+    try:
+        return np.nextafter(x, towards)
+    except TypeError:  # ml_dtypes formats
+        int_t = {2: np.int16, 4: np.int32}[x.dtype.itemsize]
+        bits = x.view(int_t)
+        step = np.where(towards.astype(np.float64) > x.astype(np.float64), 1, -1)
+        step = np.where(x.astype(np.float64) < 0, -step, step).astype(int_t)
+        return (bits + step).view(x.dtype)
+
+
+def sweep_edges(dtype="float32") -> np.ndarray:
+    """IEEE edge corpus: signed zeros/infs, nan, extremes, powers of two."""
+    p, emin, emax = _fmt(dtype)
+    dt = _resolve_dtype(dtype)
+    tiny = np.ldexp(1.0, emin)
+    big = np.ldexp(2.0 - 2.0 ** (1 - p), emax)
+    vals = [0.0, -0.0, np.inf, -np.inf, np.nan,
+            1.0, -1.0, 2.0, -2.0, 0.5, -0.5,
+            tiny, -tiny, big, -big,
+            np.ldexp(1.0, emin - 1), -np.ldexp(1.0, emin - 1),   # subnormal
+            np.ldexp(1.0, emax), -np.ldexp(1.0, emax)]
+    vals += [np.ldexp(1.0, e) for e in range(emin, emax, 16)]
+    return np.asarray(vals, np.float64).astype(dt)
+
+
+def sweep_subnormals(n: int = 256, dtype="float32", seed: int = 2) -> np.ndarray:
+    """Signed subnormal inputs (reciprocal overflows: the FTZ stratum)."""
+    p, emin, _ = _fmt(dtype)
+    rng = np.random.default_rng(seed)
+    tiny = np.ldexp(1.0, emin)
+    x = rng.uniform(np.ldexp(1.0, emin - (p - 1)), tiny, n)
+    return (x * rng.choice([-1.0, 1.0], n)).astype(_resolve_dtype(dtype))
+
+
+def stratified_sweep(dtype="float32", n_log: int = 4096, n_man: int = 4096,
+                     boundaries: Iterable[float] | None = None,
+                     seed: int = 0) -> Dict[str, np.ndarray]:
+    """The standard operand corpus, one array per stratum."""
+    strata = {
+        "logspace": sweep_logspace(n_log, dtype, seed),
+        "mantissa": sweep_mantissa(n_man, dtype, seed + 1),
+        "edges": sweep_edges(dtype),
+        "subnormals": sweep_subnormals(256, dtype, seed + 2),
+    }
+    if boundaries is not None:
+        strata["boundaries"] = sweep_boundaries(boundaries, dtype)
+    return strata
+
+
+def summarize(errs: np.ndarray, mask: np.ndarray | None = None) -> Dict[str, float]:
+    """max/mean/p99 ULP over the oracle-valid lanes."""
+    e = np.asarray(errs, np.float64)
+    if mask is not None:
+        e = e[mask]
+    if e.size == 0:
+        return {"max_ulp": 0.0, "mean_ulp": 0.0, "p99_ulp": 0.0, "n": 0}
+    with np.errstate(invalid="ignore"):   # percentile interpolation with infs
+        p99 = float(np.percentile(e, 99))
+    return {
+        "max_ulp": float(e.max()),
+        "mean_ulp": float(e.mean()),
+        "p99_ulp": p99,
+        "n": int(e.size),
+    }

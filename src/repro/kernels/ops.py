@@ -28,7 +28,11 @@ _SUBLANE = 8
 
 
 def pallas_applicable(x) -> bool:
-    """division_modes guard: kernels handle f32/bf16 with >= 2 total elements."""
+    """division_modes guard: kernels handle f32/bf16 with >= 1 total element.
+
+    0-d and 1-element inputs are fine — _to_2d pads them out to one
+    (8, 128) tile; only empty arrays fall back to the jnp path.
+    """
     return x.dtype in (jnp.float32, jnp.bfloat16) and x.size >= 1
 
 

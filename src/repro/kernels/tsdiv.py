@@ -1,5 +1,10 @@
 """Pallas TPU kernel: fused Taylor-series reciprocal / divide (the paper's unit).
 
+Three refinement schedules share the datapath (see kernels/common.py):
+"paper" (§6 powering), "factored" (log-depth squarings), and "goldschmidt"
+(N += N*r residual-register recurrence — the rival algorithm of
+arXiv:1909.10154 fused into the same VMEM-resident kernel).
+
 Elementwise over 2D-tiled blocks resident in VMEM. The whole division unit —
 unpack, PWL seed ladder, series refinement, repack — is one fused VPU kernel:
 a single HBM read and write per element, vs. read/write per stage if composed

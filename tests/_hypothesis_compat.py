@@ -1,0 +1,99 @@
+"""Optional-hypothesis shim: tier-1 must collect and run without the package.
+
+With ``hypothesis`` installed (see requirements-dev.txt) this re-exports the
+real thing and property tests get full search + shrinking. Without it, a
+minimal fallback replays a deterministic fixed-example grid per test —
+boundary values first, then seeded samples — so every property test still
+*executes* in minimal environments instead of killing collection.
+
+Usage in test modules (drop-in for the hypothesis import):
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    # Replay at most this many fixed examples per test; hypothesis-style
+    # max_examples=200 budgets are for randomized search, not fixed replay.
+    _MAX_REPLAY = 24
+
+    class _Strategy:
+        def __init__(self, boundary, sample):
+            self._boundary = list(boundary)
+            self._sample = sample
+
+        def examples(self, n, rng):
+            out = list(self._boundary[:n])
+            while len(out) < n:
+                out.append(self._sample(rng))
+            # Deterministic shuffle so tuples pair boundaries with
+            # non-boundaries across multi-strategy @given calls.
+            return [out[i] for i in rng.permutation(len(out))]
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                [min_value, max_value, (min_value + max_value) // 2],
+                lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            if min_value > 0:
+                lo, hi = np.log(min_value), np.log(max_value)
+                sample = lambda r: float(np.exp(r.uniform(lo, hi)))
+            else:
+                sample = lambda r: float(r.uniform(min_value, max_value))
+            return _Strategy([min_value, max_value], sample)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(seq, lambda r: seq[int(r.integers(len(seq)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True], lambda r: bool(r.integers(2)))
+
+    st = _St()
+
+    def settings(max_examples: int = _MAX_REPLAY, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_compat_max_examples", _MAX_REPLAY),
+                    _MAX_REPLAY)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                cols = [s.examples(n, rng) for s in strategies]
+                for vals in zip(*cols):
+                    fn(*args, *vals, **kwargs)
+
+            # Strategies bind the rightmost params; hide them from pytest's
+            # fixture resolution (inspect.signature would follow __wrapped__).
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - len(strategies)])
+            return wrapper
+        return deco

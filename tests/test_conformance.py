@@ -1,0 +1,136 @@
+"""Conformance gates: the paper's precision claim measured in ULPs.
+
+Enforces (a) eq. 17 at the f32 operating point — n=2 iterations on the
+24-bit seed table deliver a reciprocal within 2 ULP of the f64 oracle over
+the stratified sweep; (b) Goldschmidt parity — at matched covered-term
+count it lands within 1 integer ULP of the factored Taylor schedule; and
+(c) the committed golden vectors (bit-exact accuracy regressions fail here).
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import division_modes as dm
+from repro.core import goldschmidt, taylor
+from repro.core.seeds import compute_segments
+from repro.eval import conformance, golden, ulp
+
+
+@pytest.fixture(scope="module")
+def sweep_f32():
+    """Stratified normal-operand sweep incl. seed-segment boundary straddles."""
+    t = compute_segments(2, 24)
+    strata = ulp.stratified_sweep("float32", n_log=4096, n_man=4096,
+                                  boundaries=t.boundaries)
+    x = np.concatenate([np.asarray(s, np.float32) for s in strata.values()])
+    x64 = x.astype(np.float64)
+    keep = ulp.oracle_mask(x64) & ulp.oracle_mask(
+        np.divide(1.0, x64, out=np.zeros_like(x64), where=x64 != 0))
+    return x[keep]
+
+
+def test_paper_claim_n2_p24_within_2ulp(sweep_f32):
+    """Eq. 17 gate: n=2 @ 24-bit seed => f32 reciprocal max error <= 2 ULP."""
+    t = compute_segments(2, 24)
+    x = jnp.asarray(sweep_f32)
+    exact = 1.0 / sweep_f32.astype(np.float64)
+    for schedule in ("paper", "factored"):
+        r = np.asarray(taylor.reciprocal(x, t, schedule=schedule))
+        errs = ulp.ulp_error(r, exact)
+        assert errs.max() <= 2.0, (schedule, errs.max())
+    # The factored schedule (production default) is comfortably sub-ULP.
+    r = np.asarray(taylor.reciprocal(x, t, schedule="factored"))
+    assert ulp.ulp_error(r, exact).max() <= 1.0
+
+
+def test_goldschmidt_within_1ulp_of_factored(sweep_f32):
+    """Matched covered-term count: |goldschmidt - factored| <= 1 integer ULP."""
+    t = compute_segments(2, 24)
+    x = jnp.asarray(sweep_f32)
+    rf = np.asarray(taylor.reciprocal(x, t, schedule="factored"))
+    rg = np.asarray(goldschmidt.reciprocal(
+        x, t, iters=goldschmidt.iters_for_terms(2)))
+    d = ulp.ulp_diff(rg, rf)
+    assert d.max() <= 1, d.max()
+    # And Goldschmidt itself stays within the 2-ULP paper gate.
+    exact = 1.0 / sweep_f32.astype(np.float64)
+    assert ulp.ulp_error(rg, exact).max() <= 2.0
+
+
+def test_pallas_kernels_match_jnp_within_1ulp(sweep_f32):
+    """Fused kernels and jnp twins agree to <= 1 ULP on the full sweep."""
+    x = jnp.asarray(sweep_f32)
+    for mode, twin in [("taylor_pallas", "taylor"),
+                       ("goldschmidt_pallas", "goldschmidt")]:
+        rk = np.asarray(dm.recip(x, dm.DivisionConfig(mode=mode)))
+        rj = np.asarray(dm.recip(x, dm.DivisionConfig(mode=twin)))
+        assert ulp.ulp_diff(rk, rj).max() <= 1, mode
+
+
+def test_dial_monotone_in_ulp(sweep_f32):
+    """The accuracy dial: higher (n, bits) => strictly tighter max ULP."""
+    x = jnp.asarray(sweep_f32)
+    exact = 1.0 / sweep_f32.astype(np.float64)
+    maxes = []
+    for n, p in [(1, 12), (2, 24)]:
+        t = compute_segments(n, p)
+        r = np.asarray(taylor.reciprocal(x, t, schedule="factored"))
+        maxes.append(ulp.ulp_error(r, exact).max())
+    assert maxes[0] > 4 * maxes[1], maxes   # 12-bit config is way looser
+
+
+@pytest.mark.slow
+def test_conformance_grid_all_modes():
+    """The runner covers all five algorithm families and both dtypes,
+    with a clean IEEE edge contract and a JSON-serializable report."""
+    report = conformance.run_conformance(quick=True, n_log=256, n_man=256)
+    modes = {c["mode"] for c in report["cells"]}
+    assert {"exact", "taylor", "taylor_pallas", "goldschmidt",
+            "goldschmidt_pallas", "ilm"} <= modes
+    dtypes = {c["dtype"] for c in report["cells"]}
+    assert {"float32", "bfloat16"} <= dtypes
+    for c in report["cells"]:
+        assert c["edge_failures"] == 0, c["key"]
+    exact_cell = conformance.cell_lookup(report, mode="exact", op="recip",
+                                         dtype="float32")
+    assert exact_cell["overall"]["max_ulp"] <= 0.5 + 1e-9
+    ilm_cell = conformance.cell_lookup(report, mode="ilm", op="recip",
+                                       dtype="float32")
+    assert ilm_cell["overall"]["max_ulp"] > 100   # genuinely ~12-bit
+    json.dumps(report)                            # machine-readable
+    assert conformance.format_table(report)
+
+
+def test_golden_vectors_unchanged():
+    """Committed golden vectors: any numerics drift fails loudly, by name."""
+    assert golden.GOLDEN_PATH.exists(), (
+        "golden store missing — run `python -m repro.eval.golden --generate`")
+    failures = golden.check()
+    assert failures == [], failures
+
+
+def test_ulp_engine_selfchecks():
+    """The measuring stick itself: ordered map, ulp sizes, masks."""
+    a = np.float32(1.0)
+    up = np.nextafter(a, np.float32(2.0))
+    assert ulp.ulp_diff(np.asarray([a]), np.asarray([up]))[0] == 1
+    assert ulp.ulp_diff(np.asarray([np.float32(0.0)]),
+                        np.asarray([np.float32(-0.0)]))[0] == 0
+    assert ulp.ulp_diff(np.asarray([np.float32(np.nan)]),
+                        np.asarray([np.float32(np.nan)]))[0] == 0
+    # ulp_size: 2^-23 at 1.0, constant 2^-149 through the f32 subnormals.
+    assert ulp.ulp_size(np.asarray([1.0]))[0] == 2.0 ** -23
+    assert ulp.ulp_size(np.asarray([1e-40]))[0] == 2.0 ** -149
+    # bf16: 8 mantissa bits -> ulp(1.0) = 2^-7.
+    assert ulp.ulp_size(np.asarray([1.0]), "bfloat16")[0] == 2.0 ** -7
+    # oracle_mask rejects inf/nan/subnormal/overflow, keeps normals.
+    m = ulp.oracle_mask(np.asarray([1.0, np.inf, np.nan, 1e-40, 1e39]))
+    assert list(m) == [True, False, False, False, False]
+    # error of a half-ulp-perturbed value is 0.5.
+    exact = np.asarray([1.0 + 2.0 ** -24])
+    got = np.asarray([np.float32(1.0)])
+    err = ulp.ulp_error(got, exact)
+    assert abs(err[0] - 0.5) < 1e-6

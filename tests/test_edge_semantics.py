@@ -1,0 +1,81 @@
+"""IEEE/hardware edge contract for recip/div/rsqrt in EVERY division mode.
+
+The contract every mode (exact XLA, Taylor jnp, Taylor Pallas, Goldschmidt,
+Goldschmidt Pallas, ILM emulation) must honor:
+
+    +-0 -> +-inf      +-inf -> +-0      nan -> nan      sign preserved
+
+rsqrt follows jax.lax.rsqrt: +-0 -> +-inf, +inf -> +0, x < 0 (incl -inf)
+and nan -> nan.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import division_modes as dm
+
+ALL_MODES = list(dm.MODES)
+
+
+def _cfg(mode):
+    return dm.DivisionConfig(mode=mode)
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_recip_edges_and_signs(mode):
+    x = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan, 2.0, -2.0,
+                     0.25, -0.25], jnp.float32)
+    r = np.asarray(dm.recip(x, _cfg(mode)))
+    assert np.isposinf(r[0]), (mode, r[0])
+    assert np.isneginf(r[1]), (mode, r[1])
+    assert r[2] == 0.0 and not np.signbit(r[2]), (mode, r[2])
+    assert r[3] == 0.0 and np.signbit(r[3]), (mode, r[3])
+    assert np.isnan(r[4]), (mode, r[4])
+    # Sign preservation on finite operands.
+    assert r[5] > 0 and r[6] < 0 and r[7] > 0 and r[8] < 0, (mode, r[5:])
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_div_edges_and_signs(mode):
+    cfg = _cfg(mode)
+    a = jnp.asarray([1.0, -1.0, 1.0, -1.0, 0.0, np.inf, 1.0, 1.0,
+                     np.nan, 1.0, 6.0, -6.0], jnp.float32)
+    b = jnp.asarray([0.0, 0.0, -0.0, -0.0, 0.0, np.inf, np.inf, -np.inf,
+                     1.0, np.nan, 3.0, 3.0], jnp.float32)
+    q = np.asarray(dm.div(a, b, cfg))
+    assert np.isposinf(q[0]), (mode, q[0])      # 1 / +0
+    assert np.isneginf(q[1]), (mode, q[1])      # -1 / +0
+    assert np.isneginf(q[2]), (mode, q[2])      # 1 / -0
+    assert np.isposinf(q[3]), (mode, q[3])      # -1 / -0
+    assert np.isnan(q[4]), (mode, q[4])         # 0 / 0
+    assert np.isnan(q[5]), (mode, q[5])         # inf / inf
+    assert q[6] == 0.0 and not np.signbit(q[6]), (mode, q[6])   # 1 / +inf
+    assert q[7] == 0.0 and np.signbit(q[7]), (mode, q[7])       # 1 / -inf
+    assert np.isnan(q[8]) and np.isnan(q[9]), (mode, q[8:10])   # nan prop
+    tol = 0.05 if mode == "ilm" else 1e-5
+    assert abs(q[10] - 2.0) < tol and abs(q[11] + 2.0) < tol, (mode, q[10:])
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_rsqrt_edges(mode):
+    x = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan, 4.0, -4.0],
+                    jnp.float32)
+    r = np.asarray(dm.rsqrt(x, _cfg(mode)))
+    assert np.isposinf(r[0]), (mode, r[0])
+    assert np.isneginf(r[1]), (mode, r[1])
+    assert r[2] == 0.0 and not np.signbit(r[2]), (mode, r[2])
+    assert np.isnan(r[3]), (mode, r[3])         # rsqrt(-inf)
+    assert np.isnan(r[4]), (mode, r[4])
+    assert abs(r[5] - 0.5) < 1e-5, (mode, r[5])
+    assert np.isnan(r[6]), (mode, r[6])         # rsqrt of negative
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_recip_edges_bf16(mode):
+    """The contract survives the bf16 in/out cast."""
+    x = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan, -2.0], jnp.bfloat16)
+    r = np.asarray(dm.recip(x, _cfg(mode)), np.float32)
+    assert np.isposinf(r[0]) and np.isneginf(r[1]), (mode, r[:2])
+    assert r[2] == 0.0 and r[3] == 0.0 and np.signbit(r[3]), (mode, r[2:4])
+    assert np.isnan(r[4]) and r[5] < 0, (mode, r[4:])

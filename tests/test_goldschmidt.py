@@ -1,0 +1,82 @@
+"""core/goldschmidt.py: oracle precision, Taylor equivalence, joint divide."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import goldschmidt, taylor
+from repro.core.seeds import compute_segments
+
+
+class TestItersDial:
+    def test_iters_for_terms(self):
+        # 2^j >= n+1: n=1 -> 1, n=2..3 -> 2, n=4..7 -> 3, n=17 -> 5
+        assert goldschmidt.iters_for_terms(1) == 1
+        assert goldschmidt.iters_for_terms(2) == 2
+        assert goldschmidt.iters_for_terms(3) == 2
+        assert goldschmidt.iters_for_terms(7) == 3
+        assert goldschmidt.iters_for_terms(17) == 5
+
+
+class TestOracle:
+    def test_quadratic_convergence(self, rng):
+        """Each iteration squares the residual: error ~ m_max^(2^j)."""
+        t = compute_segments(5, 53)
+        x = rng.uniform(1.0, 2.0, 50_000)
+        prev = None
+        for iters in (1, 2, 3):
+            r = goldschmidt.reciprocal_np(x, t, iters=iters)
+            err = np.max(np.abs(r * x - 1.0))
+            if prev is not None and prev > 1e-14:
+                # quadratic until the f64 evaluation-rounding floor
+                assert err <= max(prev * prev * 4.0, 2**-50)
+            prev = err
+        assert prev < 2**-50
+
+    def test_matches_factored_taylor_algebra(self, rng):
+        """j Goldschmidt iterations == factored Taylor covering 2^j terms
+        (identical product, different evaluation order -> f64-rounding close)."""
+        t = compute_segments(5, 53)
+        x = rng.uniform(1.0, 2.0, 20_000)
+        rg = goldschmidt.reciprocal_np(x, t, iters=2)
+        rf = taylor.reciprocal_np(x, t, n_iters=3, schedule="factored")
+        np.testing.assert_allclose(rg, rf, rtol=1e-14)
+
+    def test_divide_oracle(self, rng):
+        a = rng.normal(size=10_000) * 100
+        b = rng.uniform(0.5, 100, 10_000)
+        q = goldschmidt.divide_np(a, b, iters=3)
+        assert np.max(np.abs(q - a / b) / np.abs(a / b + 1e-30)) < 2**-49
+
+
+class TestJnp:
+    def test_full_range(self, rng):
+        t = compute_segments(2, 24)
+        x = jnp.asarray(rng.uniform(0.01, 1000, 50_000), jnp.float32)
+        r = jax.jit(lambda v: goldschmidt.reciprocal(v, t))(x)
+        rel = np.abs(np.asarray(r) * np.asarray(x) - 1.0)
+        assert rel.max() < 2**-22
+
+    def test_divide_no_intermediate_underflow(self):
+        """Joint mantissa refinement: q is fine even where recip(b) would
+        be subnormal/flushed — the failure mode of a*recip(b) divides."""
+        a = jnp.asarray([2.0**100, 2.0**120], jnp.float32)
+        b = jnp.asarray([2.0**127, 2.0**127], jnp.float32)
+        q = np.asarray(goldschmidt.divide(a, b, iters=2))
+        expect = np.asarray([2.0**-27, 2.0**-7])
+        np.testing.assert_allclose(q, expect, rtol=1e-6)
+
+    def test_bf16_passthrough(self, rng):
+        x = jnp.asarray(rng.uniform(0.1, 10, 4096), jnp.bfloat16)
+        r = goldschmidt.reciprocal(x)
+        rel = np.abs(np.asarray(r, np.float32) * np.asarray(x, np.float32) - 1)
+        assert rel.max() < 0.02
+
+    def test_grad(self):
+        g = jax.grad(lambda v: goldschmidt.reciprocal(v).sum())(jnp.float32(2.0))
+        assert abs(float(g) + 0.25) < 1e-5
+        ga, gb = jax.grad(lambda a, b: goldschmidt.divide(a, b).sum(),
+                          argnums=(0, 1))(jnp.float32(6.0), jnp.float32(3.0))
+        assert abs(float(ga) - 1 / 3) < 1e-5
+        assert abs(float(gb) + 2 / 3) < 1e-5

@@ -1,7 +1,7 @@
 """Paper §4-5: Iterative Logarithmic Multiplier — exactness + error decay."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -39,7 +39,7 @@ class TestTsdiv:
         e = np.asarray(ref.tsdiv_recip_exact(x))
         np.testing.assert_allclose(np.asarray(k), e, rtol=rtol)
 
-    @pytest.mark.parametrize("schedule", ["paper", "factored"])
+    @pytest.mark.parametrize("schedule", ["paper", "factored", "goldschmidt"])
     def test_schedules(self, rng, schedule):
         x = _rand(rng, (32, 256), 0.5, 2.0)
         k = ops.tsdiv_recip(x, schedule=schedule)
@@ -67,6 +67,45 @@ class TestTsdiv:
         assert k.dtype == jnp.bfloat16
         rel = np.abs(np.asarray(k, np.float32) * np.asarray(x, np.float32) - 1)
         assert rel.max() < 0.02
+
+
+class TestShapeEdges:
+    """pallas_applicable contract + the padded _to_2d/_from_2d round-trip."""
+
+    def test_pallas_applicable(self):
+        assert ops.pallas_applicable(jnp.float32(4.0))                 # 0-d
+        assert ops.pallas_applicable(jnp.ones((1,), jnp.float32))      # 1 elem
+        assert ops.pallas_applicable(jnp.ones((3,), jnp.bfloat16))
+        assert not ops.pallas_applicable(jnp.ones((0,), jnp.float32))  # empty
+        assert not ops.pallas_applicable(jnp.ones((4,), jnp.int32))
+
+    def test_recip_0d_roundtrip(self):
+        r = ops.tsdiv_recip(jnp.float32(4.0))
+        assert r.shape == () and r.dtype == jnp.float32
+        assert abs(float(r) - 0.25) < 1e-6
+
+    def test_recip_1elem_roundtrip(self):
+        r = ops.tsdiv_recip(jnp.asarray([2.0], jnp.float32))
+        assert r.shape == (1,)
+        assert abs(float(r[0]) - 0.5) < 1e-6
+
+    def test_divide_0d_and_1elem(self):
+        q = ops.tsdiv_divide(jnp.float32(6.0), jnp.float32(3.0))
+        assert q.shape == () and abs(float(q) - 2.0) < 1e-5
+        q1 = ops.tsdiv_divide(jnp.asarray([6.0], jnp.float32),
+                              jnp.asarray([3.0], jnp.float32))
+        assert q1.shape == (1,) and abs(float(q1[0]) - 2.0) < 1e-5
+
+    def test_empty_falls_back_to_jnp(self):
+        from repro.core import division_modes as dm
+
+        e = dm.recip(jnp.ones((0,), jnp.float32),
+                     dm.DivisionConfig(mode="taylor_pallas"))
+        assert e.shape == (0,)
+
+    def test_grad_through_0d_kernel(self):
+        g = jax.grad(lambda v: ops.tsdiv_recip(v))(jnp.float32(4.0))
+        assert abs(float(g) + 1 / 16) < 1e-5
 
 
 class TestRmsnorm:

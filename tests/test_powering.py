@@ -1,7 +1,7 @@
 """Paper §5-6: powering unit schedule + squaring-unit hardware claim."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import powering
 

@@ -11,9 +11,11 @@ from repro.configs import get_config, rules_for
 from repro.sharding import rules as shr
 
 
+from repro.launch.mesh import _axis_type_kwargs as _axis_kwargs
+
+
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"), **_axis_kwargs(2))
 
 
 class TestSpecFor:
@@ -88,8 +90,8 @@ from repro.optim import adamw
 from repro.train import step as ts
 
 cfg = dataclasses.replace(get_smoke_config("llama3_8b"))
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import _axis_type_kwargs as _axis_kwargs
+mesh = jax.make_mesh((4, 2), ("data", "model"), **_axis_kwargs(2))
 params = init_params(cfg, jax.random.PRNGKey(0))
 pshard = shr.param_shardings(cfg, mesh)
 params = jax.device_put(params, pshard)
@@ -110,8 +112,7 @@ import tempfile, numpy as np
 from repro.train import checkpoint as ck
 with tempfile.TemporaryDirectory() as d:
     ck.save(d, 1, new_state)
-    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"), **_axis_kwargs(2))
     pshard2 = shr.param_shardings(cfg, mesh2)
     state_shard2 = ts.TrainState(
         params=pshard2,
@@ -149,8 +150,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.optim import compress
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import _axis_type_kwargs as _axis_kwargs
+mesh = jax.make_mesh((2, 4), ("pod", "data"), **_axis_kwargs(2))
 g = jnp.asarray(np.random.default_rng(0).normal(size=(2, 4, 64)), jnp.float32)
 err = jnp.zeros_like(g)
 

@@ -1,7 +1,7 @@
 """Paper §2 + §6: Taylor-series reciprocal — oracle precision, schedules, edges."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
