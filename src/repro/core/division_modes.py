@@ -98,12 +98,50 @@ def recip(x, cfg: DivisionConfig = TAYLOR):
 
 
 def div(a, b, cfg: DivisionConfig = TAYLOR):
+    """a/b through the exponent-separated datapath (never a * recip(b)).
+
+    Every approximate mode refines the mantissa pair in [1, 2) and applies
+    the exponent difference once at the end, so the quotient is accurate
+    whenever a/b is representable — even where the intermediate reciprocal
+    would under/overflow (a = 2^100, b = 2^127). The Pallas modes dispatch
+    to the fused divide kernel (schedule="goldschmidt" runs the joint N/D
+    refinement in-kernel); ilm keeps the bit-faithful a * recip(b)
+    emulation, whose under/overflow is part of what it emulates.
+    """
     if cfg.mode == "exact":
         return a / b
-    if cfg.mode == "goldschmidt":
+    if cfg.mode == "ilm":
+        import jax.numpy as jnp
+
+        from . import fpparts
+
+        aj, bj = jnp.broadcast_arrays(jnp.asarray(a), jnp.asarray(b))
+        q = aj * recip(bj, cfg)
+        # The special-value logic sits outside the mantissa datapath even in
+        # the ILM unit: the composed multiply turns inf * (recip-underflow-
+        # to-0) into nan where IEEE wants inf.
+        s = fpparts.sign_product(jnp, aj, bj)
+        return fpparts.div_edges(jnp, q, aj, bj, jnp.abs(aj), jnp.abs(bj), s)
+    if cfg.mode in ("taylor_pallas", "goldschmidt_pallas"):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        aj, bj = jnp.broadcast_arrays(jnp.asarray(a), jnp.asarray(b))
+        # Promote mixed operands up front (as a * recip(b) would have): the
+        # kernel wrapper returns its first argument's dtype.
+        ct = jnp.promote_types(aj.dtype, bj.dtype)
+        aj, bj = aj.astype(ct), bj.astype(ct)
+        if kops.pallas_applicable(aj) and kops.pallas_applicable(bj):
+            sched = (cfg.schedule if cfg.mode == "taylor_pallas"
+                     else "goldschmidt")
+            return kops.tsdiv_divide(aj, bj, n_iters=cfg.n_iters,
+                                     precision_bits=cfg.precision_bits,
+                                     schedule=sched)
+    if cfg.mode in ("goldschmidt", "goldschmidt_pallas"):
         # Goldschmidt's hallmark: the numerator rides the F-multiplies.
         return goldschmidt.divide(a, b, cfg.table, iters=cfg.gs_iters)
-    return a * recip(b, cfg)
+    return taylor.divide(a, b, cfg.table, schedule=cfg.schedule)
 
 
 def rsqrt(x, cfg: DivisionConfig = TAYLOR):

@@ -1,0 +1,152 @@
+"""Shared sign/exponent/mantissa bookkeeping for the divide datapath.
+
+Real hardware dividers (the source paper's unit, and the Goldschmidt units of
+arXiv:1909.10154) never divide full floats: they xor the signs, subtract the
+exponents, and refine a *mantissa pair in [1, 2)*, recombining at the very
+end. Composing ``a * recip(b)`` instead materializes an intermediate
+reciprocal that under/overflows even when ``a/b`` is representable (e.g.
+a = 2^100, b = 2^127: 1/b is subnormal, but a/b = 2^-27 is a perfectly
+normal float). This module is that hardware bookkeeping, factored once:
+
+  * :func:`decompose_div`  — sign product, |a|/|b|, mantissas in [1, 2) via a
+    single ``frexp`` per operand, and the unbiased exponents;
+  * :func:`recombine_div`  — one round-trip back through ``ldexp``, split in
+    two steps so the internal 2^k factor never overflows;
+  * :func:`div_edges`      — the IEEE/hardware special-value contract
+    (±0, ±inf, nan sign rules) applied after the mantissa math;
+  * :func:`two_product`    — Dekker/Veltkamp error-free multiply, the
+    building block for compensated residuals;
+  * :func:`refine_quotient` — Markstein-style correcting final multiply:
+    the hardware unit's final multiplier produces the full 2p-bit product
+    and rounds once, which p-bit float emulation recovers by folding the
+    exact remainder ``a - q0*b`` back through the reciprocal.
+
+Everything is pure operator arithmetic parameterized by the array module
+``xp``, so one body serves the numpy f64 oracles, the jnp f32 path, and the
+Pallas kernel bodies alike.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "two_product", "sign_product", "decompose_div", "ldexp2", "recombine_div",
+    "div_edges", "refine_quotient", "recombine_recip", "jnp_divide",
+]
+
+
+def sign_product(xp, a, b):
+    """±1 with the sign of a*b, signed zeros included (the quotient sign)."""
+    return (xp.copysign(xp.asarray(1.0, a.dtype), a)
+            * xp.copysign(xp.asarray(1.0, b.dtype), b))
+
+
+def two_product(a, b):
+    """Error-free transform of a product: returns (p, e) with a*b == p + e.
+
+    Veltkamp-split both operands with the factor 2^ceil(prec/2) + 1
+    (f32 -> 4097, f64 -> 2^27 + 1) and recover the rounding error of the
+    p-bit product. Works under FMA contraction too — a contracted
+    ``ah*bh - p`` is the exact error term.
+    """
+    p = a * b
+    prec = np.finfo(np.dtype(a.dtype)).nmant + 1
+    c = float(2 ** ((prec + 1) // 2) + 1)
+    ta = c * a
+    ah = ta - (ta - a)
+    al = a - ah
+    tb = c * b
+    bh = tb - (tb - b)
+    bl = b - bh
+    e = ((ah * bh - p) + ah * bl + al * bh) + al * bl
+    return p, e
+
+
+def decompose_div(xp, a, b):
+    """Unpack a divide: sign product, magnitudes, [1,2) mantissas, exponents.
+
+    Returns ``(s, aa, ab, man_a, man_b, ea, eb)`` with |a| = man_a * 2^(ea-1)
+    and likewise for b (``frexp`` convention: frac in [0.5, 1), so the [1, 2)
+    mantissa carries exponent e-1). Zeros keep a zero mantissa; infs/nans
+    pass through frexp and are overridden by :func:`div_edges`.
+    """
+    s = sign_product(xp, a, b)
+    aa, ab = xp.abs(a), xp.abs(b)
+    fa, ea = xp.frexp(aa)
+    fb, eb = xp.frexp(ab)
+    man_a, man_b = fa * 2.0, fb * 2.0               # [1, 2); 0 stays 0
+    return s, aa, ab, man_a, man_b, ea, eb
+
+
+def ldexp2(xp, x, k):
+    """ldexp for |k| up to ~2*emax: two steps so the internal 2^k factor
+    never overflows even when x * 2^k is representable."""
+    h = k // 2
+    return xp.ldexp(xp.ldexp(x, h), k - h)
+
+
+def recombine_div(xp, q_man, de, s):
+    """q = q_man * 2^de * s. de = ea - eb spans ~[-2*emax, 2*emax]."""
+    return ldexp2(xp, q_man, de) * s
+
+
+def div_edges(xp, q, a, b, aa, ab, s):
+    """IEEE special-value contract for a/b, applied after the mantissa math:
+
+        x/±0 -> ±inf    ±inf/y -> ±inf    x/±inf -> ±0    (sign = s)
+        0/0, inf/inf, nan operands -> nan
+    """
+    inf = xp.asarray(np.inf, q.dtype)
+    zero = xp.asarray(0.0, q.dtype)
+    nan = xp.asarray(np.nan, q.dtype)
+    q = xp.where((ab == 0) & (aa != 0), xp.copysign(inf, s), q)
+    q = xp.where(xp.isinf(aa) & ~xp.isinf(ab), xp.copysign(inf, s), q)
+    q = xp.where(xp.isinf(ab) & ~xp.isinf(aa), xp.copysign(zero, s), q)
+    q = xp.where((aa == 0) & (ab == 0), nan, q)
+    q = xp.where(xp.isinf(aa) & xp.isinf(ab), nan, q)
+    q = xp.where(xp.isnan(a) | xp.isnan(b), nan, q)
+    return q
+
+
+def recombine_recip(xp, rman, eb, b):
+    """~1/b from the refined mantissa reciprocal (feeds the analytic VJP;
+    under/overflow here only zeroes a gradient lane, never the primal)."""
+    return xp.ldexp(rman, 1 - eb) * xp.sign(b)
+
+
+def jnp_divide(a, b, impl):
+    """Shared jnp wrapper for the exponent-separated divides.
+
+    ``impl(jnp, af, bf) -> (q, rb)`` is the f32 divide body (Taylor or
+    Goldschmidt). Handles dtype promotion (mixed bf16/f32 operands promote,
+    as the composed ``a * recip(b)`` form did), the f32 compute dance, and
+    attaches the analytic gradient dq = rb*da - q*rb*db (frexp/ldexp carry
+    zero cotangent otherwise — see taylor.attach_grad).
+    """
+    import jax.numpy as jnp
+
+    from .taylor import attach_grad
+
+    a, b = jnp.asarray(a), jnp.asarray(b)
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    q, rb = impl(jnp, af, bf)
+    q = attach_grad(q, [(af, rb), (bf, -q * rb)])
+    return q.astype(out_dtype)
+
+
+def refine_quotient(q0, man_a, man_b, rman):
+    """Markstein correcting step: q = q0 + rman * (man_a - q0*man_b).
+
+    The remainder is computed error-free: two_product gives q0*man_b as
+    p + e exactly, and man_a - p is exact by Sterbenz (p lies within a
+    factor 2 of man_a since q0 ~ man_a/man_b). With rman accurate to even a
+    few thousand ULPs the corrected quotient lands within ~1 ULP of
+    man_a/man_b — this is the float emulation of the hardware unit's
+    full-width final multiplier (Fig. 7), whose 2p-bit product is rounded
+    exactly once.
+    """
+    p, e = two_product(q0, man_b)
+    res = (man_a - p) - e
+    return q0 + res * rman

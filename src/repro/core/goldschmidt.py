@@ -30,6 +30,7 @@ import math
 
 import numpy as np
 
+from . import fpparts
 from .seeds import SeedTable, compute_segments
 from .taylor import exact_residual, seed_eval
 
@@ -46,13 +47,6 @@ def iters_for_terms(n_terms: int) -> int:
     match the factored schedule's covered-term count exactly.
     """
     return max(1, math.ceil(math.log2(n_terms + 1)))
-
-
-def _ldexp2(xp, x, k):
-    """ldexp for |k| up to ~2*emax: two steps so the internal 2^k factor
-    never overflows even when x * 2^k is representable."""
-    h = k // 2
-    return xp.ldexp(xp.ldexp(x, h), k - h)
 
 
 def _refine(num0, man_b, y0, iters: int, with_recip: bool = False):
@@ -90,27 +84,14 @@ def _reciprocal_impl(xp, x, table: SeedTable, iters: int):
 
 
 def _divide_impl(xp, a, b, table: SeedTable, iters: int):
-    s = xp.copysign(xp.asarray(1.0, a.dtype), a) * xp.copysign(
-        xp.asarray(1.0, b.dtype), b)
-    aa, ab = xp.abs(a), xp.abs(b)
-    fa, ea = xp.frexp(aa)
-    fb, eb = xp.frexp(ab)
-    man_a, man_b = fa * 2.0, fb * 2.0               # [1, 2); 0 stays 0
+    """Exponent-separated joint N/D divide via the shared fpparts layer."""
+    s, aa, ab, man_a, man_b, ea, eb = fpparts.decompose_div(xp, a, b)
     y0 = seed_eval(xp, man_b, table)
     q_man, rb_man = _refine(man_a * y0, man_b, y0, iters,
                             with_recip=True)        # q_man in (0.5, 2)
-    rb = xp.ldexp(rb_man, 1 - eb) * xp.sign(b)      # ~1/b, for the VJP
-    q = _ldexp2(xp, q_man, ea - eb) * s             # ea-eb spans ~[-253, 253]
-    inf = xp.asarray(np.inf, q.dtype)
-    zero = xp.asarray(0.0, q.dtype)
-    nan = xp.asarray(np.nan, q.dtype)
-    q = xp.where((ab == 0) & (aa != 0), xp.copysign(inf, s), q)
-    q = xp.where(xp.isinf(aa) & ~xp.isinf(ab), xp.copysign(inf, s), q)
-    q = xp.where(xp.isinf(ab) & ~xp.isinf(aa), xp.copysign(zero, s), q)
-    q = xp.where((aa == 0) & (ab == 0), nan, q)
-    q = xp.where(xp.isinf(aa) & xp.isinf(ab), nan, q)
-    q = xp.where(xp.isnan(a) | xp.isnan(b), nan, q)
-    return q, rb
+    rb = fpparts.recombine_recip(xp, rb_man, eb, b)  # ~1/b, for the VJP
+    q = fpparts.recombine_div(xp, q_man, ea - eb, s)  # ea-eb spans ~[-253, 253]
+    return fpparts.div_edges(xp, q, a, b, aa, ab, s), rb
 
 
 # ---------------------------------------------------------------- numpy oracle
@@ -145,14 +126,6 @@ def reciprocal(x, table: SeedTable | None = None, *, iters: int = 2):
 
 def divide(a, b, table: SeedTable | None = None, *, iters: int = 2):
     """Goldschmidt a/b with joint N/D refinement (not a*recip(b))."""
-    import jax.numpy as jnp
-
-    from .taylor import attach_grad
-
     table = table or compute_segments(2, 24)
-    out_dtype = a.dtype
-    af = a.astype(jnp.float32)
-    bf = b.astype(jnp.float32)
-    q, rb = _divide_impl(jnp, af, bf, table, iters)
-    q = attach_grad(q, [(af, rb), (bf, -q * rb)])   # dq = rb*da - q*rb*db
-    return q.astype(out_dtype)
+    return fpparts.jnp_divide(
+        a, b, lambda xp, af, bf: _divide_impl(xp, af, bf, table, iters))

@@ -25,12 +25,12 @@ from typing import Any
 import numpy as np
 
 from .seeds import SeedTable, compute_segments, rsqrt_seed_table
-from . import powering
+from . import fpparts, powering
 
 __all__ = [
     "reciprocal", "reciprocal_np", "divide", "divide_np", "rsqrt", "rsqrt_np",
     "default_table", "exact_residual", "series_sum", "seed_eval",
-    "attach_grad",
+    "divide_mantissa", "attach_grad",
 ]
 
 
@@ -51,17 +51,7 @@ def exact_residual(man, y0):
     Pure operator arithmetic, so one body serves numpy and jnp (no xp
     parameter, unlike its siblings).
     """
-    p = man * y0
-    # Split factor 2^ceil(prec/2) + 1: f32 -> 4097, f64 -> 2^27 + 1.
-    prec = np.finfo(np.dtype(man.dtype)).nmant + 1
-    c = float(2 ** ((prec + 1) // 2) + 1)
-    tm = c * man
-    mh = tm - (tm - man)
-    ml = man - mh
-    ty = c * y0
-    yh = ty - (ty - y0)
-    yl = y0 - yh
-    e = ((mh * yh - p) + mh * yl + ml * yh) + ml * yl   # man*y0 == p + e exactly
+    p, e = fpparts.two_product(man, y0)                 # man*y0 == p + e exactly
     return (1.0 - p) - e
 
 
@@ -112,6 +102,40 @@ def _reciprocal_mantissa(xp, man, table: SeedTable, n: int, schedule: str):
     return y0 + y0 * series_sum(xp, m, n, schedule)
 
 
+def divide_mantissa(xp, man_a, man_b, table: SeedTable, n: int, schedule: str):
+    """man_a/man_b for mantissas in [1, 2): series reciprocal + corrected
+    final multiply. Returns (q_man, rman) with q_man in (0.5, 2) and rman
+    the refined 1/man_b (the divide gradient needs it).
+
+    The naive final multiply ``man_a * rman`` carries rman's full relative
+    error into whichever binade the quotient lands in — up to ~2x the
+    reciprocal's ULP error, which busts the eq. 17 gate for the paper
+    schedule. :func:`fpparts.refine_quotient` folds the exact remainder back
+    through rman instead, emulating the unit's full-width final multiplier.
+    """
+    rman = _reciprocal_mantissa(xp, man_b, table, n, schedule)
+    q_man = fpparts.refine_quotient(man_a * rman, man_a, man_b, rman)
+    return q_man, rman
+
+
+def _divide_impl(xp, a, b, table: SeedTable, n: int, schedule: str):
+    """Exponent-separated a/b: decompose, mantissa divide, recombine, edges.
+
+    Never materializes 1/b at b's exponent — the refinement stays in the
+    [1, 2) mantissa domain and the exponent difference is applied once at
+    the end, so the quotient is accurate whenever a/b is representable even
+    where recip(b) would under/overflow. Returns (q, rb) with rb ~ 1/b for
+    the analytic VJP (rb under/overflowing only zeroes the gradient lane,
+    never the primal).
+    """
+    s, aa, ab, man_a, man_b, ea, eb = fpparts.decompose_div(xp, a, b)
+    q_man, rman = divide_mantissa(xp, man_a, man_b, table, n, schedule)
+    rb = fpparts.recombine_recip(xp, rman, eb, b)
+    q = fpparts.recombine_div(xp, q_man, ea - eb, s)
+    q = fpparts.div_edges(xp, q, a, b, aa, ab, s)
+    return q, rb
+
+
 def _reciprocal_impl(xp, x, table: SeedTable, n: int, schedule: str):
     """Full FP reciprocal: sign/exponent unpack, mantissa recip, repack, edges."""
     sign = xp.sign(x)
@@ -137,8 +161,13 @@ def reciprocal_np(x, table: SeedTable | None = None, *, n_iters: int | None = No
     return _reciprocal_impl(np, x, table, n, schedule)
 
 
-def divide_np(a, b, table: SeedTable | None = None, **kw) -> np.ndarray:
-    return np.asarray(a, np.float64) * reciprocal_np(b, table, **kw)
+def divide_np(a, b, table: SeedTable | None = None, *, n_iters: int | None = None,
+              schedule: str = "paper") -> np.ndarray:
+    table = table or compute_segments(5, 53)
+    n = table.n_iters if n_iters is None else n_iters
+    q, _ = _divide_impl(np, np.asarray(a, np.float64),
+                        np.asarray(b, np.float64), table, n, schedule)
+    return q
 
 
 def rsqrt_np(x, table: SeedTable | None = None, *, newton_iters: int = 3) -> np.ndarray:
@@ -191,8 +220,13 @@ def reciprocal(x, table: SeedTable | None = None, *, n_iters: int | None = None,
     return r.astype(out_dtype)
 
 
-def divide(a, b, table: SeedTable | None = None, **kw):
-    return a * reciprocal(b, table, **kw)
+def divide(a, b, table: SeedTable | None = None, *, n_iters: int | None = None,
+           schedule: str = "factored"):
+    """Exponent-separated a/b (never a * recip(b) — see _divide_impl)."""
+    table = table or default_table()
+    n = table.n_iters if n_iters is None else n_iters
+    return fpparts.jnp_divide(
+        a, b, lambda xp, af, bf: _divide_impl(xp, af, bf, table, n, schedule))
 
 
 def _rsqrt_impl(xp, x, table: SeedTable, newton_iters: int):

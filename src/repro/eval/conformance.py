@@ -60,24 +60,21 @@ class Cell:
 
 def default_grid(dtypes: Sequence[str] = ulp.DTYPES,
                  dial: Sequence = DIAL, quick: bool = False) -> List[Cell]:
-    """Every (mode x schedule x n_iters x dtype) cell, plus div spot-checks."""
+    """Every (op x mode x schedule x n_iters x dtype) cell of the grid."""
     if quick:
         dial = [d for d in dial if d == (2, 24)] or [dial[0]]
     cells: List[Cell] = []
     for dt in dtypes:
-        cells.append(Cell("exact", dtype=dt))
-        for n, p in dial:
-            for sched in ("paper", "factored"):
-                cells.append(Cell("taylor", sched, n, p, dt))
-            cells.append(Cell("taylor_pallas", "factored", n, p, dt))
-            cells.append(Cell("goldschmidt", "-", n, p, dt))
-            cells.append(Cell("goldschmidt_pallas", "-", n, p, dt))
-        # ILM carries ~12 mantissa bits by construction — one cell suffices.
-        cells.append(Cell("ilm", "-", 2, 24, dt))
-        # Divide spot-checks at the default operating point.
-        for mode in ("exact", "taylor", "goldschmidt"):
-            cells.append(Cell(mode, "factored" if mode == "taylor" else "-",
-                              2, 24, dt, op="div"))
+        for op in ("recip", "div"):
+            cells.append(Cell("exact", dtype=dt, op=op))
+            for n, p in dial:
+                for sched in ("paper", "factored"):
+                    cells.append(Cell("taylor", sched, n, p, dt, op=op))
+                cells.append(Cell("taylor_pallas", "factored", n, p, dt, op=op))
+                cells.append(Cell("goldschmidt", "-", n, p, dt, op=op))
+                cells.append(Cell("goldschmidt_pallas", "-", n, p, dt, op=op))
+            # ILM carries ~12 mantissa bits by construction — one cell each.
+            cells.append(Cell("ilm", "-", 2, 24, dt, op=op))
     return cells
 
 
@@ -95,6 +92,47 @@ def _edge_failures(x64: np.ndarray, r64: np.ndarray) -> int:
     return fails
 
 
+def _div_edge_failures(a64: np.ndarray, b64: np.ndarray,
+                       q64: np.ndarray) -> int:
+    """IEEE special-value contract for a/b on the operand-edge corpus.
+
+    Checks only the lanes whose outcome is fixed by the operands' special
+    values (zeros, infs, nans — including sign rules); finite/finite lanes
+    that merely overflow or underflow are the FTZ class, judged elsewhere.
+    """
+    sign = np.signbit(a64) ^ np.signbit(b64)
+    a_zero, b_zero = a64 == 0, b64 == 0
+    a_inf, b_inf = np.isinf(a64), np.isinf(b64)
+    a_nan, b_nan = np.isnan(a64), np.isnan(b64)
+    finite_a = np.isfinite(a64)
+    finite_b = np.isfinite(b64)
+    # Subnormal operands are the FTZ class (kernels legitimately flush them
+    # to zero before the special-value logic) — excluded from the sign-rule
+    # lanes below; nan propagation holds regardless. f32 and bf16 share
+    # emin = -126.
+    tiny = np.ldexp(1.0, -126)
+    subn = (((a64 != 0) & finite_a & (np.abs(a64) < tiny))
+            | ((b64 != 0) & finite_b & (np.abs(b64) < tiny)))
+    a_zero, b_zero = a_zero & ~subn, b_zero & ~subn
+    a_inf, b_inf = a_inf & ~subn, b_inf & ~subn
+    fails = 0
+    # x/0 (x finite nonzero or inf) -> signed inf.
+    lane = b_zero & ~a_zero & ~a_nan
+    fails += int(np.sum(lane & ~(np.isinf(q64) & (np.signbit(q64) == sign))))
+    # 0/y (y nonzero finite or inf) -> signed zero.
+    lane = a_zero & ~b_zero & ~b_nan
+    fails += int(np.sum(lane & ~((q64 == 0) & (np.signbit(q64) == sign))))
+    # inf/y (y finite) -> signed inf;  x/inf (x finite) -> signed zero.
+    lane = a_inf & finite_b & ~b_nan
+    fails += int(np.sum(lane & ~(np.isinf(q64) & (np.signbit(q64) == sign))))
+    lane = b_inf & finite_a & ~a_nan
+    fails += int(np.sum(lane & ~((q64 == 0) & (np.signbit(q64) == sign))))
+    # Invalid: 0/0, inf/inf, any nan operand -> nan.
+    lane = (a_zero & b_zero) | (a_inf & b_inf) | a_nan | b_nan
+    fails += int(np.sum(lane & ~np.isnan(q64)))
+    return fails
+
+
 def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
              seed: int = 0) -> Dict:
     """Measure one cell over the stratified sweep; returns a report dict."""
@@ -102,43 +140,66 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
 
     cfg = cell.config()
     table = compute_segments(cell.n_iters, cell.precision_bits)
-    strata = ulp.stratified_sweep(cell.dtype, n_log=n_log, n_man=n_man,
-                                  boundaries=table.boundaries, seed=seed)
     t0 = time.perf_counter()
     per_stratum: Dict[str, Dict] = {}
     edge_fail = 0
     agg: List[np.ndarray] = []
-    for name, xs in strata.items():
-        x64 = np.asarray(xs).astype(np.float64)
-        xj = jnp.asarray(xs)
-        if cell.op == "div":
-            # Pair each denominator with a deterministic numerator sweep.
-            a64 = np.asarray(
-                ulp.sweep_logspace(x64.size, cell.dtype, seed + 7),
-                np.float64)[:x64.size]
-            aj = jnp.asarray(a64.astype(np.asarray(xs).dtype))
-            r = div(aj, xj, cfg)
-            with np.errstate(divide="ignore", invalid="ignore"):
-                exact = a64 / x64
-        else:
-            r = recip(xj, cfg)
-            with np.errstate(divide="ignore", invalid="ignore"):
-                exact = 1.0 / x64          # IEEE: +-0 -> +-inf, +-inf -> +-0
-        r_np = np.asarray(r)
-        # ULP stats are defined where the exact result is a normal number AND
-        # every operand is normal: XLA (like the hardware unit) flushes
-        # subnormal operands to zero, so those lanes are an FTZ edge class.
-        mask = ulp.oracle_mask(exact, cell.dtype) & ulp.oracle_mask(x64, cell.dtype)
-        if cell.op == "div":
-            mask &= ulp.oracle_mask(a64, cell.dtype)
+
+    def measure(name: str, r_np: np.ndarray, exact: np.ndarray,
+                mask: np.ndarray) -> None:
+        """Shared per-stratum bookkeeping for both ops."""
         errs = ulp.ulp_error(r_np, exact, cell.dtype, where=mask)
         per_stratum[name] = ulp.summarize(errs, mask)
-        if name == "subnormals":
-            per_stratum[name]["ftz_frac"] = float(
-                np.mean(np.isinf(r_np.astype(np.float64))))
-        if name == "edges" and cell.op == "recip":
-            edge_fail = _edge_failures(x64, r_np.astype(np.float64))
         agg.append(errs[mask])
+
+    if cell.op == "div":
+        pairs = ulp.div_sweep(cell.dtype, n_log=n_log, n_man=n_man,
+                              boundaries=table.boundaries, seed=seed)
+        for name, (a_s, b_s) in pairs.items():
+            a64 = np.asarray(a_s).astype(np.float64)
+            b64 = np.asarray(b_s).astype(np.float64)
+            q = div(jnp.asarray(a_s), jnp.asarray(b_s), cfg)
+            q_np = np.asarray(q)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                exact = a64 / b64
+            # ULP stats where the exact quotient AND both operands are
+            # normal; subnormal operands/results are the FTZ edge class,
+            # and quotients within 2 ULP of the under/overflow cliffs are
+            # guard-banded (a <= 2 ULP unit may flush/overflow them).
+            mask = (ulp.oracle_mask(exact, cell.dtype)
+                    & ulp.cliff_guard(exact, cell.dtype)
+                    & ulp.oracle_mask(a64, cell.dtype)
+                    & ulp.oracle_mask(b64, cell.dtype))
+            measure(name, q_np, exact, mask)
+            if name == "subnormals":
+                # FTZ signature on subnormal denominators: flushed-b lanes
+                # divide as x/0 -> inf (or 0 for flushed numerators).
+                q64 = q_np.astype(np.float64)
+                per_stratum[name]["ftz_frac"] = float(
+                    np.mean(np.isinf(q64) | (q64 == 0)))
+            if name == "edges":
+                edge_fail = _div_edge_failures(a64, b64,
+                                               q_np.astype(np.float64))
+    else:
+        strata = ulp.stratified_sweep(cell.dtype, n_log=n_log, n_man=n_man,
+                                      boundaries=table.boundaries, seed=seed)
+        for name, xs in strata.items():
+            x64 = np.asarray(xs).astype(np.float64)
+            r = recip(jnp.asarray(xs), cfg)
+            r_np = np.asarray(r)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                exact = 1.0 / x64          # IEEE: +-0 -> +-inf, +-inf -> +-0
+            # ULP stats are defined where the exact result is a normal number
+            # AND every operand is normal: XLA (like the hardware unit)
+            # flushes subnormal operands to zero — an FTZ edge class.
+            mask = (ulp.oracle_mask(exact, cell.dtype)
+                    & ulp.oracle_mask(x64, cell.dtype))
+            measure(name, r_np, exact, mask)
+            if name == "subnormals":
+                per_stratum[name]["ftz_frac"] = float(
+                    np.mean(np.isinf(r_np.astype(np.float64))))
+            if name == "edges":
+                edge_fail = _edge_failures(x64, r_np.astype(np.float64))
     allv = np.concatenate(agg) if agg else np.zeros(0)
     out = dataclasses.asdict(cell)
     out.update({

@@ -25,9 +25,12 @@ import numpy as np
 
 from . import ulp
 
-__all__ = ["GOLDEN_PATH", "golden_cells", "golden_inputs", "generate", "check"]
+__all__ = ["GOLDEN_PATH", "DIVIDE_PATH", "golden_cells", "golden_inputs",
+           "golden_div_cells", "golden_div_inputs", "generate",
+           "generate_divide", "check", "check_divide"]
 
 GOLDEN_PATH = Path(__file__).parent / "golden" / "reciprocal_v1.npz"
+DIVIDE_PATH = Path(__file__).parent / "golden" / "divide_v1.npz"
 
 
 def golden_cells() -> List[Tuple[str, Dict]]:
@@ -70,6 +73,47 @@ def golden_numerators(n: int) -> np.ndarray:
     return ulp.sweep_logspace(n, "float32", seed=104)
 
 
+def golden_div_cells() -> List[Tuple[str, Dict]]:
+    """op=div cells in the divide store: every approximate divide datapath."""
+    return [
+        ("div/taylor/paper/n2p24",
+         dict(mode="taylor", schedule="paper", n_iters=2, precision_bits=24)),
+        ("div/taylor/factored/n2p24",
+         dict(mode="taylor", schedule="factored", n_iters=2,
+              precision_bits=24)),
+        ("div/taylor/factored/n1p12",
+         dict(mode="taylor", schedule="factored", n_iters=1,
+              precision_bits=12)),
+        ("div/taylor_pallas/factored/n2p24",
+         dict(mode="taylor_pallas", schedule="factored", n_iters=2,
+              precision_bits=24)),
+        ("div/goldschmidt/n2p24",
+         dict(mode="goldschmidt", n_iters=2, precision_bits=24)),
+        ("div/goldschmidt_pallas/n2p24",
+         dict(mode="goldschmidt_pallas", n_iters=2, precision_bits=24)),
+    ]
+
+
+def golden_div_inputs() -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic f32 (a, b) pair corpus for the divide store.
+
+    Includes the adversarial classes the exponent-separated datapath exists
+    for: ratio-representable-but-reciprocal-underflowing pairs, quotients
+    straddling the under/overflow cliffs, the full IEEE edge cross product,
+    and subnormal operands (FTZ class).
+    """
+    b_log = ulp.sweep_logspace(192, "float32", seed=201)
+    a_log = ulp.sweep_logspace(192, "float32", seed=202)
+    a_rx, b_rx = ulp.sweep_ratio_extremes(128, "float32", seed=203)
+    a_qe, b_qe = ulp.sweep_quotient_edges(96, "float32", seed=204)
+    a_ed, b_ed = ulp.div_edge_pairs("float32")
+    b_sub = ulp.sweep_subnormals(32, "float32", seed=205)
+    a_sub = ulp.sweep_logspace(32, "float32", seed=206)
+    a = np.concatenate([a_log, a_rx, a_qe, a_ed, a_sub]).astype(np.float32)
+    b = np.concatenate([b_log, b_rx, b_qe, b_ed, b_sub]).astype(np.float32)
+    return a, b
+
+
 def _compute(key: str, kw: Dict, x: np.ndarray, a: np.ndarray) -> np.ndarray:
     import jax.numpy as jnp
 
@@ -101,6 +145,50 @@ def generate(path: Path = GOLDEN_PATH) -> Path:
     return path
 
 
+def generate_divide(path: Path = DIVIDE_PATH) -> Path:
+    """Recompute every divide cell and (over)write the committed vectors."""
+    import jax
+
+    a, b = golden_div_inputs()
+    arrays = {"a": a, "b": b}
+    for key, kw in golden_div_cells():
+        arrays["out:" + key] = _compute(key, kw, b, a).view(np.uint32)
+    arrays["meta"] = np.frombuffer(json.dumps({
+        "version": 1, "jax": jax.__version__, "numpy": np.__version__,
+    }).encode(), np.uint8)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(path, **arrays)
+    return path
+
+
+def check_divide(path: Path = DIVIDE_PATH, tolerance_ulp: int = 0) -> List[Dict]:
+    """Recompute the divide store and diff. Returns failures (empty = pass)."""
+    if not path.exists():
+        return [{"cell": "divide store", "error": f"missing {path} — run "
+                 "`python -m repro.eval.golden --generate --store divide`"}]
+    with np.load(path) as z:
+        a, b = z["a"], z["b"]
+        stored = {k[len("out:"):]: z[k] for k in z.files if k.startswith("out:")}
+    failures: List[Dict] = []
+    for key, kw in golden_div_cells():
+        if key not in stored:
+            failures.append({"cell": key, "error": "missing from store"})
+            continue
+        want = stored[key].view(np.float32)
+        got = _compute(key, kw, b, a)
+        d = ulp.ulp_diff(got, want)
+        bad = d > tolerance_ulp
+        if bad.any():
+            i = int(np.argmax(d))
+            failures.append({
+                "cell": key,
+                "n_mismatch": int(bad.sum()),
+                "max_ulp_drift": int(d.max()),
+                "first_pair": (float(a[i]), float(b[i])),
+            })
+    return failures
+
+
 def check(path: Path = GOLDEN_PATH, tolerance_ulp: int = 0) -> List[Dict]:
     """Recompute and diff against the store. Returns failures (empty = pass)."""
     with np.load(path) as z:
@@ -130,21 +218,36 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--generate", action="store_true")
     ap.add_argument("--check", action="store_true")
-    ap.add_argument("--path", type=Path, default=GOLDEN_PATH)
+    ap.add_argument("--store", choices=("recip", "divide", "all"),
+                    default="all", help="which committed store(s) to act on")
     ap.add_argument("--tolerance-ulp", type=int, default=0)
     args = ap.parse_args(argv)
+    do_recip = args.store in ("recip", "all")
+    do_divide = args.store in ("divide", "all")
     if args.generate:
-        p = generate(args.path)
-        print(f"wrote {p} ({p.stat().st_size} bytes, "
-              f"{len(golden_cells())} cells x {golden_inputs().size} points)")
+        if do_recip:
+            p = generate()
+            print(f"wrote {p} ({p.stat().st_size} bytes, "
+                  f"{len(golden_cells())} cells x {golden_inputs().size} points)")
+        if do_divide:
+            p = generate_divide()
+            print(f"wrote {p} ({p.stat().st_size} bytes, "
+                  f"{len(golden_div_cells())} cells x "
+                  f"{golden_div_inputs()[0].size} pairs)")
         return 0
-    failures = check(args.path, args.tolerance_ulp)
+    failures: List[Dict] = []
+    if do_recip:
+        failures += check(tolerance_ulp=args.tolerance_ulp)
+    if do_divide:
+        failures += check_divide(tolerance_ulp=args.tolerance_ulp)
     if failures:
         print("GOLDEN-VECTOR REGRESSION:")
         for f in failures:
             print(f"  {f}")
         return 1
-    print(f"golden vectors ok ({len(golden_cells())} cells, {args.path})")
+    n = (len(golden_cells()) if do_recip else 0) + (
+        len(golden_div_cells()) if do_divide else 0)
+    print(f"golden vectors ok ({n} cells)")
     return 0
 
 

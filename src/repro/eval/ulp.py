@@ -28,8 +28,10 @@ import numpy as np
 
 __all__ = [
     "DTYPES", "ulp_size", "to_ordered", "ulp_diff", "ulp_error",
-    "oracle_mask", "sweep_logspace", "sweep_mantissa", "sweep_boundaries",
-    "sweep_edges", "sweep_subnormals", "stratified_sweep", "summarize",
+    "oracle_mask", "cliff_guard", "sweep_logspace", "sweep_mantissa",
+    "sweep_boundaries", "sweep_edges", "sweep_subnormals", "stratified_sweep",
+    "summarize", "sweep_ratio_extremes", "sweep_quotient_edges",
+    "div_edge_pairs", "div_sweep",
 ]
 
 
@@ -107,6 +109,26 @@ def oracle_mask(exact: np.ndarray, dtype="float32") -> np.ndarray:
     # Largest finite: (2 - 2^(1-p)) * 2^emax.
     big = np.ldexp(2.0 - 2.0 ** (1 - p), emax)
     return np.isfinite(ax) & (ax >= tiny) & (ax <= big)
+
+
+def cliff_guard(exact: np.ndarray, dtype="float32",
+                ulps: float = 2.0) -> np.ndarray:
+    """Lanes whose exact magnitude sits more than ``ulps`` ULPs inside the
+    normal range's cliffs.
+
+    A unit permitted k ULPs of error may legitimately flush a quotient whose
+    exact value lies within k ULPs of the smallest normal (FTZ turns the
+    miss into -100% error) or overflow one within k ULPs of the largest
+    finite. Those lanes belong to the FTZ/overflow edge class, not the ULP
+    statistics; AND this with :func:`oracle_mask` for cliff-straddling
+    corpora like ``sweep_quotient_edges``.
+    """
+    p, emin, emax = _fmt(dtype)
+    ax = np.abs(np.asarray(exact, np.float64))
+    tiny = np.ldexp(1.0, emin)
+    big = np.ldexp(2.0 - 2.0 ** (1 - p), emax)
+    return ((ax >= tiny * (1.0 + ulps * 2.0 ** (1 - p)))
+            & (ax <= big - ulps * np.ldexp(1.0, emax - p + 1)))
 
 
 def ulp_error(approx: np.ndarray, exact: np.ndarray, dtype="float32",
@@ -208,6 +230,108 @@ def stratified_sweep(dtype="float32", n_log: int = 4096, n_man: int = 4096,
     }
     if boundaries is not None:
         strata["boundaries"] = sweep_boundaries(boundaries, dtype)
+    return strata
+
+
+# --------------------------------------------------------------- div sweeps
+#
+# Divide needs *pairs*: the hard cases are relations between numerator and
+# denominator (ratio representable while the intermediate reciprocal is not;
+# quotient a few ULPs from the overflow/underflow cliff), which no product of
+# independent single-operand sweeps reaches with useful density.
+
+def sweep_ratio_extremes(n: int = 2048, dtype="float32",
+                         seed: int = 3) -> tuple[np.ndarray, np.ndarray]:
+    """(a, b) with a/b a normal number while 1/b is subnormal or inexact.
+
+    The killer corpus for ``a * recip(b)`` divides: |b| sits within a few
+    octaves of 2^emax, so the intermediate reciprocal under/overflows (f32:
+    1/b < 2^-126) even though the quotient's exponent is unremarkable. An
+    exponent-separated datapath is flat here; the composed one was measured
+    at 1.6e7 max ULP.
+    """
+    p, emin, emax = _fmt(dtype)
+    rng = np.random.default_rng(seed)
+    dt = _resolve_dtype(dtype)
+    # |b| = 2^(eb-1) * [1,2) in [2^(emax-1), 2^(emax+1)) => 1/|b| at or
+    # below the smallest normal on every lane: the true recip-underflow class.
+    eb = rng.uniform(emax, emax + 1, n)
+    # Quotient exponent anywhere representable given ea <= emax.
+    eq = rng.uniform(emin + 2, np.minimum(emax - eb, emax) - 1, n)
+    b = (rng.choice([-1.0, 1.0], n) * np.exp2(eb)
+         * rng.uniform(1.0, 2.0, n) / 2.0).astype(dt)
+    a = (rng.choice([-1.0, 1.0], n) * np.exp2(eq + eb)
+         * rng.uniform(1.0, 2.0, n) / 2.0).astype(dt)
+    return a, b
+
+
+def sweep_quotient_edges(n: int = 1024, dtype="float32",
+                         seed: int = 4) -> tuple[np.ndarray, np.ndarray]:
+    """(a, b) whose exact quotient straddles the overflow/underflow cliffs.
+
+    Targets land log-uniformly within one octave on either side of the
+    largest-finite and smallest-normal magnitudes; a is chosen as
+    round(q_target * b) so the realized ratio stays on target to ~1 ULP.
+    Only the representable side contributes ULP statistics (oracle_mask);
+    the far side exercises the overflow->inf / FTZ->0 contract.
+    """
+    p, emin, emax = _fmt(dtype)
+    rng = np.random.default_rng(seed)
+    dt = _resolve_dtype(dtype)
+    half = n // 2
+    big = np.ldexp(2.0 - 2.0 ** (1 - p), emax)
+    tiny = np.ldexp(1.0, emin)
+    targets = np.concatenate([
+        big * np.exp2(rng.uniform(-1, 1, half)),      # straddle overflow
+        tiny * np.exp2(rng.uniform(-1, 1, n - half)), # straddle underflow
+    ]) * rng.choice([-1.0, 1.0], n)
+    # Denominators mid-range so a = q*b stays representable for the
+    # overflow half (|q| ~ 2^128 needs |b| <~ 1) and the underflow half.
+    eb = np.where(np.abs(targets) > 1.0,
+                  rng.uniform(emin / 2, -1.0, n),
+                  rng.uniform(1.0, emax / 2, n))
+    b = (rng.choice([-1.0, 1.0], n) * np.exp2(eb)
+         * rng.uniform(1.0, 2.0, n) / 2.0).astype(dt)
+    a = (targets * b.astype(np.float64)).astype(dt)
+    return a, b
+
+
+def div_edge_pairs(dtype="float32") -> tuple[np.ndarray, np.ndarray]:
+    """Full cross product of the IEEE edge corpus against itself.
+
+    Covers every special-value combination for a/b: +-0/x, x/+-0, 0/0,
+    inf/inf, inf/x, x/inf, nan propagation, subnormal operands (the FTZ
+    class), and extreme-magnitude normals.
+    """
+    base = sweep_edges(dtype)
+    a = np.repeat(base, base.size)
+    b = np.tile(base, base.size)
+    return a, b
+
+
+def div_sweep(dtype="float32", n_log: int = 4096, n_man: int = 4096,
+              boundaries: Iterable[float] | None = None,
+              seed: int = 0) -> Dict[str, tuple[np.ndarray, np.ndarray]]:
+    """The standard divide corpus: one (a, b) pair of arrays per stratum."""
+    dt = _resolve_dtype(dtype)
+    b_log = sweep_logspace(n_log, dtype, seed)
+    a_log = sweep_logspace(n_log, dtype, seed + 7)
+    b_man = sweep_mantissa(n_man, dtype, seed + 1)
+    a_man = sweep_mantissa(n_man, dtype, seed + 8)[::-1].copy()
+    b_sub = sweep_subnormals(256, dtype, seed + 2)
+    a_sub = sweep_logspace(b_sub.size, dtype, seed + 9)
+    strata: Dict[str, tuple[np.ndarray, np.ndarray]] = {
+        "logspace": (a_log, b_log),
+        "mantissa": (a_man, b_man),
+        "ratio_extremes": sweep_ratio_extremes(2048, dtype, seed + 3),
+        "quotient_edges": sweep_quotient_edges(1024, dtype, seed + 4),
+        "edges": div_edge_pairs(dtype),
+        "subnormals": (a_sub, b_sub),
+    }
+    if boundaries is not None:
+        b_bnd = sweep_boundaries(boundaries, dtype)
+        a_bnd = sweep_logspace(b_bnd.size, dtype, seed + 5).astype(dt)
+        strata["boundaries"] = (a_bnd[:b_bnd.size], b_bnd)
     return strata
 
 

@@ -80,6 +80,68 @@ def recip_f32_bits(x: jax.Array, table: SeedTable, n: int, schedule: str) -> jax
     return jnp.where((exp == 255) & (man_bits != 0), jnp.float32(np.nan), r)
 
 
+def _pow2(k: jax.Array) -> jax.Array:
+    """2^k for int32 k in [-126, 127], built by biased-exponent bitcast."""
+    return jax.lax.bitcast_convert_type(
+        (jnp.clip(k + 127, 1, 254).astype(jnp.uint32)) << 23, jnp.float32)
+
+
+def divide_f32_bits(a: jax.Array, b: jax.Array, table: SeedTable, n: int,
+                    schedule: str) -> jax.Array:
+    """Fused exponent-separated a/b: the full divide datapath in one kernel.
+
+    Sign xor, biased-exponent subtract, mantissa pair in [1, 2), then either
+    the joint N/D Goldschmidt recurrence (schedule="goldschmidt": the
+    numerator mantissa rides the F-multiplies, arXiv:1909.10154) or the
+    Taylor series reciprocal with the Markstein-corrected final multiply
+    (fpparts.refine_quotient — the full-width final multiplier of Fig. 7).
+    The exponent difference is applied in two power-of-two multiplies so the
+    intermediate scale never under/overflows while a/b is representable.
+    FTZ semantics as elsewhere: denormal operands are treated as zeros and
+    denormal quotients flush to +-0.
+    """
+    from repro.core import fpparts
+
+    abits = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    bbits = jax.lax.bitcast_convert_type(b, jnp.uint32)
+    sign = (abits ^ bbits) & F32_SIGN
+    ea = ((abits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
+    eb = ((bbits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
+    amant = abits & F32_MAN_MASK
+    bmant = bbits & F32_MAN_MASK
+    man_a = jax.lax.bitcast_convert_type(amant | F32_ONE_BITS, jnp.float32)
+    man_b = jax.lax.bitcast_convert_type(bmant | F32_ONE_BITS, jnp.float32)
+    y0 = seed_ladder(man_b, table)
+    if schedule == "goldschmidt":
+        from repro.core.goldschmidt import _refine, iters_for_terms
+
+        q_man = _refine(man_a * y0, man_b, y0, iters_for_terms(n))
+    else:
+        rman = series_refine(y0, man_b, n, schedule)
+        q_man = fpparts.refine_quotient(man_a * rman, man_a, man_b, rman)
+    # q = q_man * 2^(ea-eb), split so each factor is a normal power of two.
+    de = ea - eb                                    # biased diff == unbiased diff
+    h = de >> 1
+    q = (q_man * _pow2(h)) * _pow2(de - h)
+    # FTZ: quotients below the normal range flush to zero (sign added below).
+    q = jnp.where(jnp.abs(q) < jnp.float32(2.0 ** -126), jnp.float32(0.0), q)
+    # Edge classes on the FTZ'd operands: exp 0 => zero, exp 255 => inf/nan.
+    a_zero, b_zero = ea == 0, eb == 0
+    a_inf = (ea == 255) & (amant == 0)
+    b_inf = (eb == 255) & (bmant == 0)
+    q = jnp.where(b_zero, jnp.float32(np.inf), q)            # x/0 -> inf
+    q = jnp.where(a_zero, jnp.float32(0.0), q)               # 0/x -> 0
+    q = jnp.where(a_inf, jnp.float32(np.inf), q)             # inf/x -> inf
+    q = jnp.where(b_inf, jnp.float32(0.0), q)                # x/inf -> 0
+    q = jnp.where(a_zero & b_zero, jnp.float32(np.nan), q)   # 0/0
+    q = jnp.where(a_inf & b_inf, jnp.float32(np.nan), q)     # inf/inf
+    qbits = jax.lax.bitcast_convert_type(q, jnp.uint32) | sign
+    q = jax.lax.bitcast_convert_type(qbits, jnp.float32)
+    a_nan = (ea == 255) & (amant != 0)
+    b_nan = (eb == 255) & (bmant != 0)
+    return jnp.where(a_nan | b_nan, jnp.float32(np.nan), q)
+
+
 def rsqrt_f32(x: jax.Array, table: SeedTable, newton_iters: int) -> jax.Array:
     """rsqrt for strictly-positive x (norm denominators): PWL seed + Newton."""
     bits = jax.lax.bitcast_convert_type(x, jnp.uint32)

@@ -70,7 +70,10 @@ def _recip_fwd(x, n_iters, precision_bits, schedule):
 
 
 def _recip_bwd(n_iters, precision_bits, schedule, r, g):
-    return (-(g * r * r),)
+    # Edge lanes (r = ±inf at x = 0) get zero gradient, not 0*inf = nan —
+    # same contract as taylor.attach_grad on the jnp path.
+    rf = jnp.where(jnp.isfinite(r), r, 0.0)
+    return (-(g * rf * rf),)
 
 
 tsdiv_recip.defvjp(_recip_fwd, _recip_bwd)
@@ -79,6 +82,19 @@ tsdiv_recip.defvjp(_recip_fwd, _recip_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def tsdiv_divide(a, b, n_iters: int = 2, precision_bits: int = 24,
                  schedule: str = "factored"):
+    """Fused exponent-separated divide kernel with analytic VJP.
+
+    The primal is one kernel launch (no recip+multiply composition); the
+    reciprocal kernel runs only on the backward pass to supply 1/b for
+    d(a/b) = da/b - q*db/b. Operands must be pre-broadcast to equal shapes
+    (division_modes.div does this): broadcasting inside a custom_vjp primal
+    would desync the cotangent shapes, and silently flattening unequal
+    shapes truncated to a's size.
+    """
+    if a.shape != b.shape:
+        raise ValueError(
+            f"tsdiv_divide requires equal shapes, got {a.shape} vs "
+            f"{b.shape}; broadcast the operands first")
     orig_dtype, shape = a.dtype, a.shape
     a2, n = _to_2d(a.astype(jnp.float32))
     b2, _ = _to_2d(b.astype(jnp.float32))
@@ -89,14 +105,18 @@ def tsdiv_divide(a, b, n_iters: int = 2, precision_bits: int = 24,
 
 
 def _divide_fwd(a, b, n_iters, precision_bits, schedule):
-    rb = tsdiv_recip(b, n_iters, precision_bits, schedule)
-    q = a * rb
-    return q, (q, rb)
+    q = tsdiv_divide(a, b, n_iters, precision_bits, schedule)
+    return q, (q, b)
 
 
 def _divide_bwd(n_iters, precision_bits, schedule, res, g):
-    q, rb = res
-    return (g * rb, -(g * q * rb))
+    q, b = res
+    rb = tsdiv_recip(b, n_iters, precision_bits, schedule)
+    # Mask edge lanes (q or 1/b non-finite) to zero gradient, as
+    # taylor.attach_grad does for the jnp twins.
+    rb = jnp.where(jnp.isfinite(rb), rb, 0.0)
+    qf = jnp.where(jnp.isfinite(q), q, 0.0)
+    return (g * rb, -(g * qf * rb))
 
 
 tsdiv_divide.defvjp(_divide_fwd, _divide_bwd)

@@ -24,8 +24,11 @@ def tsdiv_recip_exact(x):
     return 1.0 / x.astype(jnp.float32)
 
 
-def tsdiv_divide_ref(a, b, **kw):
-    return a.astype(jnp.float32) * tsdiv_recip_ref(b, **kw)
+def tsdiv_divide_ref(a, b, *, n_iters: int = 2, precision_bits: int = 24,
+                     schedule: str = "factored"):
+    table = compute_segments(n_iters, precision_bits)
+    return common.divide_f32_bits(a.astype(jnp.float32), b.astype(jnp.float32),
+                                  table, n_iters, schedule)
 
 
 def tsdiv_divide_exact(a, b):

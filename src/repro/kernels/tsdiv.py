@@ -32,7 +32,7 @@ def _recip_kernel(x_ref, o_ref, *, table: SeedTable, n: int, schedule: str):
 
 
 def _divide_kernel(a_ref, b_ref, o_ref, *, table: SeedTable, n: int, schedule: str):
-    o_ref[...] = a_ref[...] * common.recip_f32_bits(b_ref[...], table, n, schedule)
+    o_ref[...] = common.divide_f32_bits(a_ref[...], b_ref[...], table, n, schedule)
 
 
 def _grid_spec(shape, block):
@@ -65,7 +65,14 @@ def tsdiv_recip_2d(x, *, n_iters: int = 2, precision_bits: int = 24,
 def tsdiv_divide_2d(a, b, *, n_iters: int = 2, precision_bits: int = 24,
                     schedule: str = "factored", block=DEFAULT_BLOCK,
                     interpret: bool = True):
-    """a / b elementwise: reciprocal datapath + the final multiplier (Fig. 7)."""
+    """a / b elementwise: the fused exponent-separated divide datapath.
+
+    schedule="goldschmidt" runs the joint N/D refinement in-kernel (the
+    numerator rides the F-multiplies); the Taylor schedules run the mantissa
+    series with the Markstein-corrected final multiply (Fig. 7's full-width
+    multiplier). Either way the quotient is accurate wherever a/b is
+    representable — no intermediate reciprocal to under/overflow.
+    """
     table = compute_segments(n_iters, precision_bits)
     grid, spec = _grid_spec(a.shape, block)
     return pl.pallas_call(

@@ -1,0 +1,329 @@
+"""op=div conformance gates: the exponent-separated divide datapath.
+
+What PR 1's grid exposed: divide composed as ``a * recip(b)`` measured
+1.6e7 max ULP on the full-exponent sweep because the intermediate
+reciprocal under/overflows even when a/b is representable. This module
+gates the fix:
+
+  (a) the eq. 17-style hard gate — taylor (paper + factored schedules) at
+      n=2 @ 24-bit and goldschmidt divide each land within 2 ULP of the f64
+      oracle over the full-exponent div sweep, ratio-straddling corpora
+      included;
+  (b) the fused Pallas divide kernels agree with their jnp twins;
+  (c) IEEE special-value tables (±0/±inf/nan sign rules) in every mode,
+      plus the subnormal FTZ edge class per datapath;
+  (d) property-based ratio-straddling pairs with pinned replay examples;
+  (e) mode="goldschmidt_pallas" divide dispatches to the fused joint-N/D
+      kernel, never the recip+multiply composition;
+  (f) gradients through the frexp/ldexp datapath stay analytic.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.core import division_modes as dm
+from repro.core import goldschmidt, taylor
+from repro.core.seeds import compute_segments
+from repro.eval import golden, ulp
+
+JNP_MODES = ["exact", "taylor", "goldschmidt", "ilm"]
+PALLAS_MODES = ["taylor_pallas", "goldschmidt_pallas"]
+
+
+@pytest.fixture(scope="module")
+def div_sweep_f32():
+    """Full stratified div pair sweep, masked to oracle-valid normal lanes."""
+    t = compute_segments(2, 24)
+    pairs = ulp.div_sweep("float32", n_log=4096, n_man=4096,
+                          boundaries=t.boundaries)
+    a = np.concatenate([np.asarray(p[0], np.float32) for p in pairs.values()])
+    b = np.concatenate([np.asarray(p[1], np.float32) for p in pairs.values()])
+    a64, b64 = a.astype(np.float64), b.astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        exact = a64 / b64
+    mask = (ulp.oracle_mask(exact) & ulp.cliff_guard(exact)
+            & ulp.oracle_mask(a64) & ulp.oracle_mask(b64))
+    return a[mask], b[mask], exact[mask]
+
+
+class TestHardGate:
+    def test_taylor_divide_n2_p24_within_2ulp(self, div_sweep_f32):
+        """Eq. 17-style gate: both Taylor schedules <= 2 ULP on the div sweep
+        (was 1.6e7 as a*recip(b)). The Markstein-corrected final multiply
+        actually delivers a near-correctly-rounded quotient (<= 1 ULP)."""
+        a, b, exact = div_sweep_f32
+        t = compute_segments(2, 24)
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        for sched in ("paper", "factored"):
+            q = np.asarray(taylor.divide(aj, bj, t, schedule=sched))
+            errs = ulp.ulp_error(q, exact)
+            assert errs.max() <= 2.0, (sched, errs.max())
+            assert errs.max() <= 1.0, (sched, errs.max())
+
+    def test_goldschmidt_divide_within_2ulp(self, div_sweep_f32):
+        """Joint N/D refinement stays within the same 2-ULP gate."""
+        a, b, exact = div_sweep_f32
+        t = compute_segments(2, 24)
+        q = np.asarray(goldschmidt.divide(
+            jnp.asarray(a), jnp.asarray(b), t,
+            iters=goldschmidt.iters_for_terms(2)))
+        errs = ulp.ulp_error(q, exact)
+        assert errs.max() <= 2.0, errs.max()
+
+    def test_fused_kernels_match_jnp_twins(self, div_sweep_f32):
+        """Pallas divide kernels agree with the jit'd jnp twins <= 1 int ULP
+        (jit matters: XLA's FMA contraction moves the eager twin ~1 ULP)."""
+        a, b, _ = div_sweep_f32
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        t = compute_segments(2, 24)
+        twins = {
+            "taylor_pallas": jax.jit(
+                lambda x, y: taylor.divide(x, y, t, schedule="factored")),
+            "goldschmidt_pallas": jax.jit(
+                lambda x, y: goldschmidt.divide(
+                    x, y, t, iters=goldschmidt.iters_for_terms(2))),
+        }
+        for mode, twin in twins.items():
+            qk = np.asarray(dm.div(aj, bj, dm.DivisionConfig(mode=mode)))
+            qj = np.asarray(twin(aj, bj))
+            assert ulp.ulp_diff(qk, qj).max() <= 1, mode
+
+    def test_divide_golden_vectors_unchanged(self):
+        """Committed op=div golden store: numerics drift fails by cell name."""
+        assert golden.DIVIDE_PATH.exists(), (
+            "divide golden store missing — run "
+            "`python -m repro.eval.golden --generate --store divide`")
+        failures = golden.check_divide()
+        assert failures == [], failures
+
+
+# ---------------------------------------------------------- special values
+
+# (a, b, expected) rows where the IEEE outcome is fixed by the operands.
+# 'expected' is a string class so signed zeros are distinguishable.
+SPECIAL_ROWS = [
+    (1.0, 0.0, "+inf"), (-1.0, 0.0, "-inf"),
+    (1.0, -0.0, "-inf"), (-1.0, -0.0, "+inf"),
+    (0.0, 0.0, "nan"), (-0.0, -0.0, "nan"), (0.0, -0.0, "nan"),
+    (np.inf, np.inf, "nan"), (-np.inf, np.inf, "nan"),
+    (np.inf, -np.inf, "nan"), (-np.inf, -np.inf, "nan"),
+    (np.inf, 2.0, "+inf"), (np.inf, -2.0, "-inf"),
+    (-np.inf, 2.0, "-inf"), (-np.inf, -2.0, "+inf"),
+    (np.inf, 0.0, "+inf"), (-np.inf, 0.0, "-inf"), (np.inf, -0.0, "-inf"),
+    (2.0, np.inf, "+0"), (-2.0, np.inf, "-0"),
+    (2.0, -np.inf, "-0"), (-2.0, -np.inf, "+0"),
+    (0.0, np.inf, "+0"), (-0.0, np.inf, "-0"), (0.0, -np.inf, "-0"),
+    (0.0, 2.0, "+0"), (0.0, -2.0, "-0"),
+    (-0.0, 2.0, "-0"), (-0.0, -2.0, "+0"),
+    (np.nan, 2.0, "nan"), (2.0, np.nan, "nan"),
+    (np.nan, 0.0, "nan"), (np.inf, np.nan, "nan"), (np.nan, np.nan, "nan"),
+]
+
+
+def _classify(v: float) -> str:
+    if np.isnan(v):
+        return "nan"
+    if np.isinf(v):
+        return "+inf" if v > 0 else "-inf"
+    if v == 0:
+        return "-0" if np.signbit(v) else "+0"
+    return "finite"
+
+
+@pytest.mark.parametrize("mode", JNP_MODES + PALLAS_MODES)
+def test_div_ieee_special_value_table(mode):
+    """±0/±inf/nan sign rules hold in every mode, jnp and fused alike."""
+    a = jnp.asarray([r[0] for r in SPECIAL_ROWS], jnp.float32)
+    b = jnp.asarray([r[1] for r in SPECIAL_ROWS], jnp.float32)
+    q = np.asarray(dm.div(a, b, dm.DivisionConfig(mode=mode)))
+    for (av, bv, want), got in zip(SPECIAL_ROWS, q):
+        assert _classify(float(got)) == want, (mode, av, bv, float(got))
+
+
+@pytest.mark.parametrize("mode", PALLAS_MODES)
+def test_div_subnormal_ftz_kernel_modes(mode):
+    """Fused kernels run FTZ: subnormal operands act as zeros, subnormal
+    quotients flush to signed zero (the hardware unit's contract)."""
+    cfg = dm.DivisionConfig(mode=mode)
+    sub = np.float32(2.0 ** -130)
+    # b subnormal -> treated as 0 -> x/0 = inf.
+    q = np.asarray(dm.div(jnp.asarray([1.0, -1.0], jnp.float32),
+                          jnp.asarray([sub, sub], jnp.float32), cfg))
+    assert np.isposinf(q[0]) and np.isneginf(q[1]), (mode, q)
+    # a subnormal -> treated as 0 -> 0/y = signed 0.
+    q = np.asarray(dm.div(jnp.asarray([sub, -sub], jnp.float32),
+                          jnp.asarray([2.0, 2.0], jnp.float32), cfg))
+    assert q[0] == 0 and not np.signbit(q[0]), (mode, q)
+    assert q[1] == 0 and np.signbit(q[1]), (mode, q)
+    # Subnormal quotient (2^-100 / 2^100 = 2^-200) -> signed 0.
+    q = np.asarray(dm.div(jnp.asarray([2.0 ** -100, -(2.0 ** -100)], jnp.float32),
+                          jnp.asarray([2.0 ** 100, 2.0 ** 100], jnp.float32), cfg))
+    assert q[0] == 0 and not np.signbit(q[0]), (mode, q)
+    assert q[1] == 0 and np.signbit(q[1]), (mode, q)
+
+
+@pytest.mark.parametrize("mode", ["taylor", "taylor_pallas",
+                                  "goldschmidt", "goldschmidt_pallas"])
+def test_div_mixed_dtype_promotes(mode):
+    """bf16/f32 mixed operands promote to f32 (as a * recip(b) did) —
+    the exponent-separated wrappers must not demote to a's dtype."""
+    cfg = dm.DivisionConfig(mode=mode)
+    a = jnp.asarray([1.0, 10.0], jnp.bfloat16)
+    b = jnp.asarray([3.0, 7.0], jnp.float32)
+    q = dm.div(a, b, cfg)
+    assert q.dtype == jnp.float32, (mode, q.dtype)
+    np.testing.assert_allclose(np.asarray(q), [1 / 3, 10 / 7], rtol=1e-6)
+    q = dm.div(b, a, cfg)
+    assert q.dtype == jnp.float32, (mode, q.dtype)
+
+
+@pytest.mark.parametrize("mode", ["taylor", "goldschmidt"])
+def test_div_subnormal_edge_class_jnp_modes(mode):
+    """The jnp twins' subnormal contract: subnormal *quotients* from normal
+    operands flush to signed zero (ldexp underflow), and subnormal
+    *operands* are a degraded FTZ edge class (XLA's frexp mis-scales them)
+    that must never poison the lane with nan — the same class the
+    conformance masks exclude from ULP statistics."""
+    cfg = dm.DivisionConfig(mode=mode)
+    q = np.asarray(dm.div(
+        jnp.asarray([2.0 ** -100, -(2.0 ** -100)], jnp.float32),
+        jnp.asarray([2.0 ** 100, 2.0 ** 100], jnp.float32), cfg))
+    assert q[0] == 0 and not np.signbit(q[0]), (mode, q)
+    assert q[1] == 0 and np.signbit(q[1]), (mode, q)
+    sub = np.float32(2.0 ** -127)
+    q = np.asarray(dm.div(jnp.asarray([sub, 1.0], jnp.float32),
+                          jnp.asarray([1.0, sub], jnp.float32), cfg))
+    assert not np.any(np.isnan(q)), (mode, q)
+
+
+# ------------------------------------------------- property-based straddles
+
+# Pinned replays of the class PR 1 exposed: quotient representable while
+# the intermediate reciprocal is subnormal (b > 2^126) or the composed
+# product loses the low bits.
+PINNED_PAIRS = [
+    (2.0 ** 100, 2.0 ** 127),       # 1/b subnormal; a/b = 2^-27
+    (2.0 ** 120, 2.0 ** 127),       # 1/b subnormal; a/b = 2^-7
+    (-(2.0 ** 90), 2.0 ** 126.5),   # sign through the straddle
+    (3.0e38, 2.9e38),               # both near overflow; a/b ~ 1.03
+    (2.0 ** -120, 2.0 ** -126),     # both near underflow; a/b = 2^6
+    (1.5, 2.0 ** 127),              # quotient itself near the FTZ cliff
+]
+
+
+@pytest.mark.parametrize("mode,schedule", [
+    ("taylor", "paper"), ("taylor", "factored"),
+    ("taylor_pallas", "factored"), ("goldschmidt", "-"),
+    ("goldschmidt_pallas", "-"),
+])
+def test_pinned_ratio_straddle_pairs(mode, schedule):
+    sched = schedule if schedule != "-" else "factored"
+    cfg = dm.DivisionConfig(mode=mode, schedule=sched)
+    a = np.asarray([p[0] for p in PINNED_PAIRS], np.float32)
+    b = np.asarray([p[1] for p in PINNED_PAIRS], np.float32)
+    q = np.asarray(dm.div(jnp.asarray(a), jnp.asarray(b), cfg))
+    exact = a.astype(np.float64) / b.astype(np.float64)
+    errs = ulp.ulp_error(q, exact)
+    assert errs.max() <= 2.0, (mode, schedule, errs.max())
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1.0, 1.999), st.floats(1.0, 1.999),
+       st.integers(-120, 0), st.integers(121, 126))
+def test_prop_quotient_representable_intermediate_underflow(ma, mb, eq, eb):
+    """Random (a, b) with b in [2^121, 2^127) — the a*recip(b) death zone —
+    and a chosen so the quotient is a mid-range normal. Every divide mode
+    must land within 2 ULP of the f64 oracle."""
+    b = np.float32(mb * 2.0 ** eb)
+    a = np.float32(ma * 2.0 ** (eq + eb))
+    exact = float(a) / float(b)          # f64, exactly representable ratio
+    aj = jnp.asarray([a], jnp.float32)
+    bj = jnp.asarray([b], jnp.float32)
+    for mode, sched in [("taylor", "paper"), ("taylor", "factored"),
+                        ("goldschmidt", "-")]:
+        cfg = dm.DivisionConfig(
+            mode=mode, schedule=sched if sched != "-" else "factored")
+        q = float(np.asarray(dm.div(aj, bj, cfg))[0])
+        err = ulp.ulp_error(np.asarray([q]), np.asarray([exact]))
+        assert err.max() <= 2.0, (mode, sched, a, b, q, exact)
+
+
+# --------------------------------------------------------- kernel dispatch
+
+def test_goldschmidt_pallas_divide_uses_fused_kernel(monkeypatch):
+    """mode="goldschmidt_pallas" divide must lower to the fused joint-N/D
+    kernel — never the recip kernel + multiply composition."""
+    from repro.kernels import ops as kops
+
+    schedules = []
+    real_divide = kops.tsdiv_divide
+
+    def spy(a, b, n_iters=2, precision_bits=24, schedule="factored"):
+        schedules.append(schedule)
+        return real_divide(a, b, n_iters, precision_bits, schedule)
+
+    def forbidden(*args, **kwargs):
+        raise AssertionError("divide fell back to recip+multiply")
+
+    monkeypatch.setattr(kops, "tsdiv_divide", spy)
+    monkeypatch.setattr(kops, "tsdiv_recip", forbidden)
+    a = jnp.full((8, 128), 6.0, jnp.float32)
+    b = jnp.full((8, 128), 3.0, jnp.float32)
+    q = dm.div(a, b, dm.DivisionConfig(mode="goldschmidt_pallas"))
+    np.testing.assert_allclose(np.asarray(q), 2.0, rtol=1e-6)
+    assert schedules == ["goldschmidt"]
+    schedules.clear()
+    q = dm.div(a, b, dm.DivisionConfig(mode="taylor_pallas"))
+    np.testing.assert_allclose(np.asarray(q), 2.0, rtol=1e-6)
+    assert schedules == ["factored"]
+
+
+# --------------------------------------------------------------- gradients
+
+@pytest.mark.parametrize("mode", ["taylor", "taylor_pallas",
+                                  "goldschmidt", "goldschmidt_pallas"])
+def test_div_gradcheck_analytic(mode):
+    """d(a/b) = (1/b, -a/b^2): the frexp/ldexp datapath must not zero the
+    cotangent (attach_grad / custom_vjp supply the analytic gradient)."""
+    cfg = dm.DivisionConfig(mode=mode)
+    ga, gb = jax.grad(lambda x, y: dm.div(x, y, cfg).sum(), argnums=(0, 1))(
+        jnp.float32(6.0), jnp.float32(3.0))
+    assert abs(float(ga) - 1 / 3) < 1e-5, (mode, ga)
+    assert abs(float(gb) + 2 / 3) < 1e-5, (mode, gb)
+    # Vector case across a spread of exponents.
+    a = jnp.asarray([2.0 ** -40, 3.0, -(2.0 ** 40)], jnp.float32)
+    b = jnp.asarray([2.0 ** 20, -7.0, 2.0 ** -20], jnp.float32)
+    ga, gb = jax.grad(lambda x, y: dm.div(x, y, cfg).sum(), argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), 1 / np.asarray(b), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(gb), -np.asarray(a) / np.asarray(b) ** 2, rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["taylor", "goldschmidt"])
+def test_div_grad_extreme_exponents_jnp(mode):
+    """The jnp twins keep analytic gradients even where 1/b is subnormal
+    (the gradient lane degrades gracefully, the primal never does)."""
+    cfg = dm.DivisionConfig(mode=mode)
+    a0, b0 = jnp.float32(2.0 ** 100), jnp.float32(2.0 ** 110)
+    ga, gb = jax.grad(lambda x, y: dm.div(x, y, cfg).sum(), argnums=(0, 1))(
+        a0, b0)
+    np.testing.assert_allclose(float(ga), 2.0 ** -110, rtol=1e-5)
+    np.testing.assert_allclose(float(gb), -(2.0 ** -120), rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["taylor", "taylor_pallas",
+                                  "goldschmidt", "goldschmidt_pallas"])
+def test_div_grad_edges_do_not_poison(mode):
+    """Gradients at IEEE edge operands are finite (masked), never nan."""
+    cfg = dm.DivisionConfig(mode=mode)
+    a = jnp.asarray([1.0, 0.0, np.inf], jnp.float32)
+    b = jnp.asarray([0.0, 0.0, 2.0], jnp.float32)
+    ga, gb = jax.grad(
+        lambda x, y: jnp.sum(jnp.where(jnp.isfinite(dm.div(x, y, cfg)),
+                                       dm.div(x, y, cfg), 0.0)),
+        argnums=(0, 1))(a, b)
+    assert np.all(np.isfinite(np.asarray(ga))), (mode, ga)
+    assert np.all(np.isfinite(np.asarray(gb))), (mode, gb)
