@@ -5,6 +5,14 @@ paper's table reports). Writes the full results to benchmarks/results.json.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run --only segments_table
+  PYTHONPATH=src python -m benchmarks.run --only workloads [--quick]
+
+The division-perf benches (``workloads``, ``tiled_divide``) additionally
+merge their rows into ``BENCH_div.json`` at the repo root — the committed
+perf-trajectory artifact (wall-clock + workload-level accuracy per division
+mode, one snapshot per PR). On this container every Pallas cell runs
+CPU-interpret, so those absolute numbers are proxies; the jnp-mode rows are
+compiled XLA and are fair CPU comparisons (see docs/numerics.md).
 """
 from __future__ import annotations
 
@@ -16,17 +24,68 @@ import time
 import numpy as np
 
 RESULTS = {}
+QUICK = False
+
+_BENCH_DIV = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_div.json")
+_BENCH_DIV_KEYS = ("workloads", "tiled_divide")
 
 
-def _time_us(fn, *args, reps: int = 5, warmup: int = 2):
+def _write_bench_div():
+    """Merge the division-perf RESULTS sections into BENCH_div.json.
+
+    Merging (rather than overwriting) lets ``--only workloads`` and
+    ``--only tiled_divide`` each refresh their own section without erasing
+    the other's trajectory point.
+    """
+    import jax
+
+    path = os.path.abspath(_BENCH_DIV)
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            doc = {}
+    doc["meta"] = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "note": ("Pallas cells run interpret-mode off-TPU: their wall-clock "
+                 "is a functional proxy, not kernel perf. jnp-mode rows are "
+                 "compiled XLA. TPU re-run pending (ROADMAP open item)."),
+    }
+    for k in _BENCH_DIV_KEYS:
+        if k in RESULTS:
+            # quick is stamped per section, not on the global meta: sections
+            # merge independently, so a CI-smoke refresh of one must not
+            # relabel a retained full-run trajectory point in the other.
+            doc[k] = {"quick": bool(QUICK), **RESULTS[k]}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}")
+
+
+def _block(out):
+    """Wait for async (jax) results; no-op for plain values."""
+    leaves = out if isinstance(out, (tuple, list)) else (out,)
+    for o in leaves:
+        if hasattr(o, "block_until_ready"):
+            o.block_until_ready()
+
+
+def _time_us(fn, *args, reps: int = 5, warmup: int = 2, ret_out: bool = False):
+    out = None
     for _ in range(warmup):
-        fn(*args)
+        out = fn(*args)
+    _block(out)          # async warmup work must not bleed into the window
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
-    if hasattr(out, "block_until_ready"):
-        out.block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
+    _block(out)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return (us, out) if ret_out else us
 
 
 def bench_segments_table():
@@ -202,6 +261,120 @@ def bench_e2e_softdiv():
     RESULTS["e2e_softdiv"] = rows
 
 
+def _workload_modes():
+    """The BENCH_div mode set: taylor/factored n=2, goldschmidt, exact."""
+    from repro.core.division_modes import DivisionConfig
+
+    return [
+        ("taylor_factored_n2", DivisionConfig(mode="taylor",
+                                              schedule="factored", n_iters=2)),
+        ("goldschmidt_n2", DivisionConfig(mode="goldschmidt", n_iters=2)),
+        ("exact", DivisionConfig(mode="exact")),
+    ]
+
+
+def bench_workloads():
+    """Division-powered workloads: K-Means + Givens QR, per mode x size.
+
+    Wall-clock per call (jit-compiled, post-warmup) plus the workload-level
+    accuracy deltas vs the XLA-exact twin on identical inits — the numbers
+    that start the BENCH_div.json perf trajectory.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.eval import workload_metrics as wm
+    from repro.workloads import kmeans as km, qr as qrw
+
+    kmeans_sizes = [(2048, 16, 8), (8192, 32, 16)]   # (N, D, K)
+    qr_sizes = [(24, 16), (48, 32)]                  # (M, N)
+    lloyd_iters = 8
+    if QUICK:
+        kmeans_sizes, qr_sizes, lloyd_iters = kmeans_sizes[:1], qr_sizes[:1], 4
+
+    rows = {"kmeans": {}, "qr": {}}
+    for n, d, k in kmeans_sizes:
+        key = jax.random.PRNGKey(n)
+        x = km.make_blobs(key, n, d, k)
+        init = jnp.take(x, jnp.arange(k) * (n // k), axis=0)
+        cell = {}
+        exact_inertia = None
+        for name, cfg in _workload_modes():
+            f = jax.jit(lambda x, init, cfg=cfg: km.kmeans(
+                x, cfg=cfg, init=init, n_iters=lloyd_iters).inertia)
+            us, out = _time_us(f, x, init, ret_out=True)
+            inertia = float(out)
+            if name == "exact":
+                exact_inertia = inertia
+            cell[name] = {"us": us, "inertia": inertia}
+            print(f"kmeans_{name}_n{n}d{d}k{k},{us:.1f},inertia={inertia:.6f}")
+        for name in cell:
+            cell[name]["inertia_delta_vs_exact"] = wm.relative_delta(
+                cell[name]["inertia"], exact_inertia)
+        rows["kmeans"][f"n{n}_d{d}_k{k}"] = cell
+    for m, n in qr_sizes:
+        a = jax.random.normal(jax.random.PRNGKey(m * n), (m, n), jnp.float32)
+        cell = {}
+        for name, cfg in _workload_modes():
+            for via in ("div", "rsqrt"):
+                f = jax.jit(lambda a, cfg=cfg, via=via: qrw.qr_givens(
+                    a, cfg, via=via))
+                us, (q, r) = _time_us(f, a, ret_out=True)
+                res = wm.qr_residuals(q, r, a)
+                cell[f"{name}_{via}"] = {"us": us, **res}
+                print(f"qr_{name}_{via}_{m}x{n},{us:.1f},"
+                      f"orth={res['orthogonality']:.2e};"
+                      f"recon={res['reconstruction']:.2e}")
+        rows["qr"][f"{m}x{n}"] = cell
+    RESULTS["workloads"] = rows
+    _write_bench_div()
+
+
+def bench_tiled_divide():
+    """Tiled fused divide kernel vs jnp.divide vs jnp-mode Taylor, per shape.
+
+    Shapes include non-multiples of the (8, 128) tile so the ragged-last-tile
+    path is what gets timed. Kernel wall-clock is interpret-mode off-TPU —
+    a functional proxy (meta.pallas_interpret records this).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import taylor
+    from repro.core.seeds import compute_segments
+    from repro.kernels import ops as kops
+
+    shapes = [(512, 512), (513, 259), (1024, 1024)]
+    if QUICK:
+        shapes = [(513, 259)]
+    t24 = compute_segments(2, 24)
+    rng = np.random.default_rng(7)
+    rows = {}
+    for shape in shapes:
+        a = jnp.asarray(np.ldexp(rng.uniform(1, 2, shape),
+                                 rng.integers(-60, 60, shape)).astype(np.float32))
+        b = jnp.asarray(np.ldexp(rng.uniform(1, 2, shape),
+                                 rng.integers(-60, 60, shape)).astype(np.float32))
+        f_xla = jax.jit(jnp.divide)
+        f_jnp = jax.jit(lambda a, b: taylor.divide(a, b, t24))
+        f_kern = jax.jit(lambda a, b: kops.tsdiv_divide(a, b))
+        us_x = _time_us(f_xla, a, b)
+        us_j = _time_us(f_jnp, a, b)
+        us_k, out_k = _time_us(f_kern, a, b, ret_out=True)
+        ref = np.asarray(a, np.float64) / np.asarray(b, np.float64)
+        err = np.abs(np.asarray(out_k, np.float64) - ref)
+        finite = np.isfinite(ref) & (np.abs(ref) >= 2.0 ** -126) \
+            & (np.abs(ref) <= np.finfo(np.float32).max)
+        max_rel = float(np.max(err[finite] / np.abs(ref[finite])))
+        name = f"{shape[0]}x{shape[1]}"
+        rows[name] = {"xla_us": us_x, "taylor_jnp_us": us_j,
+                      "tiled_kernel_us": us_k, "kernel_max_rel_err": max_rel,
+                      "ragged": shape[0] % 8 != 0 or shape[1] % 128 != 0}
+        print(f"tiled_divide_{name},{us_k:.1f},xla={us_x:.1f}us;"
+              f"jnp_taylor={us_j:.1f}us;max_rel={max_rel:.2e};"
+              f"ragged={rows[name]['ragged']}")
+    RESULTS["tiled_divide"] = rows
+    _write_bench_div()
+
+
 BENCHES = {
     "segments_table": bench_segments_table,
     "taylor_iters": bench_taylor_iters,
@@ -210,13 +383,19 @@ BENCHES = {
     "kernel_throughput": bench_kernel_throughput,
     "ulp_accuracy": bench_ulp_accuracy,
     "e2e_softdiv": bench_e2e_softdiv,
+    "workloads": bench_workloads,
+    "tiled_divide": bench_tiled_divide,
 }
 
 
 def main() -> None:
+    global QUICK
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing: one problem size per workload")
     args, _ = ap.parse_known_args()
+    QUICK = args.quick
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:

@@ -5,6 +5,8 @@ Iterative Logarithmic Multiplier" (Karani et al., 2017).
 Public API:
   repro.core        — the paper's arithmetic (seeds, taylor, ilm, powering)
   repro.kernels     — Pallas TPU kernels (+ jnp oracles)
+  repro.workloads   — division-consumer workloads (K-Means, Givens QR)
+  repro.eval        — ULP conformance, golden vectors, workload metrics
   repro.models      — transformer/SSM/MoE model zoo
   repro.configs     — the 10 assigned architectures + paper demo config
   repro.train       — fault-tolerant distributed training

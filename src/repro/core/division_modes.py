@@ -1,8 +1,10 @@
 """Framework-wide division dispatch — the paper's unit as a first-class feature.
 
-Every division site in the framework (attention softmax, RMSNorm rsqrt, MoE
-router normalization, Adam update, loss normalization) calls through here, so
-the divider implementation is one config knob:
+Every division site in the framework calls through here — attention softmax,
+RMSNorm rsqrt, MoE router normalization, Adam update, loss normalization, and
+the application workloads (``repro.workloads``: K-Means assignment/update
+divides, Givens-QR rotation coefficients) — so the divider implementation is
+one config knob:
 
   * ``exact``         — native XLA divide/rsqrt (the baseline the paper compares
                         against: "a full-precision hardware divider").

@@ -1,9 +1,14 @@
 """Division-accuracy conformance subsystem.
 
-  * ``ulp``         — exact ULP distance vs the f64 oracle + stratified sweeps
-  * ``golden``      — committed golden-vector store (regressions fail loudly)
-  * ``conformance`` — (mode x schedule x n_iters x dtype) grid runner
+  * ``ulp``              — exact ULP distance vs the f64 oracle + stratified
+    sweeps
+  * ``golden``           — committed golden-vector store (regressions fail
+    loudly)
+  * ``conformance``      — (op x mode x schedule x n_iters x dtype) grid
+    runner
+  * ``workload_metrics`` — workload-level accuracy (K-Means inertia delta,
+    QR orthogonality/reconstruction residuals) for ``repro.workloads``
 
 Entry point: ``PYTHONPATH=src python -m repro.eval.conformance``.
 """
-from . import ulp  # noqa: F401
+from . import ulp, workload_metrics  # noqa: F401

@@ -23,8 +23,9 @@ from . import tsdiv as tsdiv_k
 
 INTERPRET = jax.default_backend() != "tpu"
 
-_LANE = 128
-_SUBLANE = 8
+# One definition of the f32 tile lattice, shared with the tiled kernels.
+_LANE = tsdiv_k.LANE
+_SUBLANE = tsdiv_k.SUBLANE
 
 
 def pallas_applicable(x) -> bool:
@@ -58,6 +59,8 @@ def tsdiv_recip(x, n_iters: int = 2, precision_bits: int = 24,
     """Kernel reciprocal with analytic VJP (bitcasts bar autodiff):
     d(1/x) = -r^2 dx, reusing the kernel's own r."""
     orig_dtype, shape = x.dtype, x.shape
+    if x.size == 0:      # no lanes to launch; keep the shape/dtype contract
+        return (1.0 / x).astype(orig_dtype)
     x2, n = _to_2d(x.astype(jnp.float32))
     y = tsdiv_k.tsdiv_recip_2d(x2, n_iters=n_iters, precision_bits=precision_bits,
                                schedule=schedule, interpret=INTERPRET)
@@ -96,6 +99,25 @@ def tsdiv_divide(a, b, n_iters: int = 2, precision_bits: int = 24,
             f"tsdiv_divide requires equal shapes, got {a.shape} vs "
             f"{b.shape}; broadcast the operands first")
     orig_dtype, shape = a.dtype, a.shape
+    if a.size == 0:      # no lanes to launch; keep the shape/dtype contract
+        return jnp.divide(a, b).astype(orig_dtype)
+    if a.ndim >= 2:
+        # Rank >= 2 operands (distance planes, centroid sums, activation
+        # planes — batched or not) stream through the tiled kernel: leading
+        # dims collapse row-major into the sublane axis (a metadata-only
+        # reshape, no copy), then a 2D grid with ragged last tiles masked
+        # in-kernel — no pad copies on the way in or crop on the way out.
+        rows = int(np.prod(shape[:-1]))
+        y = tsdiv_k.tsdiv_divide_tiled_2d(
+            a.astype(jnp.float32).reshape(rows, shape[-1]),
+            b.astype(jnp.float32).reshape(rows, shape[-1]),
+            n_iters=n_iters, precision_bits=precision_bits,
+            schedule=schedule, interpret=INTERPRET)
+        return y.reshape(shape).astype(orig_dtype)
+    # Rank 0/1 keeps the flatten-pad path deliberately: a vector laid out as
+    # (1, N) in the tiled kernel would occupy one of eight sublanes per tile,
+    # while _to_2d packs it (ceil(n/128), 128) at full utilization — the
+    # conformance sweeps are exactly such rank-1 operands.
     a2, n = _to_2d(a.astype(jnp.float32))
     b2, _ = _to_2d(b.astype(jnp.float32))
     y = tsdiv_k.tsdiv_divide_2d(a2, b2, n_iters=n_iters,

@@ -26,6 +26,11 @@ from . import common
 
 DEFAULT_BLOCK = (256, 256)
 
+# f32 hardware tile lattice: VREG lane width x sublane count. ops.py's
+# shape-generic wrappers pad to the same lattice (imported from here).
+SUBLANE = 8
+LANE = 128
+
 
 def _recip_kernel(x_ref, o_ref, *, table: SeedTable, n: int, schedule: str):
     o_ref[...] = common.recip_f32_bits(x_ref[...], table, n, schedule)
@@ -40,6 +45,45 @@ def _grid_spec(shape, block):
     grid = (pl.cdiv(shape[0], bm), pl.cdiv(shape[1], bn))
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     return grid, spec
+
+
+def _tiled_grid_spec(shape, block):
+    """2D grid over an arbitrary (M, N): blocks capped at the array but kept
+    on the (8, 128) f32 tile lattice, ragged last tiles included.
+
+    Unlike :func:`_grid_spec` (which assumes the wrappers pre-padded the
+    operands to block multiples), this accepts any M, N >= 1: the grid is
+    ``cdiv`` in both dims and the last row/column of blocks simply hangs off
+    the array edge — Pallas pads the out-of-range reads and drops the
+    out-of-range writes; the kernel masks the dead lanes (see
+    ``_divide_tiled_kernel``) so no garbage operand ever enters the divide
+    datapath.
+    """
+    bm = min(block[0], -(-shape[0] // SUBLANE) * SUBLANE)
+    bn = min(block[1], -(-shape[1] // LANE) * LANE)
+    grid = (pl.cdiv(shape[0], bm), pl.cdiv(shape[1], bn))
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return grid, spec, (bm, bn)
+
+
+def _divide_tiled_kernel(a_ref, b_ref, o_ref, *, table: SeedTable, n: int,
+                         schedule: str, shape, block):
+    """Fused divide over one (bm, bn) tile of a ragged (M, N) operand pair.
+
+    Lanes past the array edge (last-tile remainder rows/columns) are forced
+    to the benign pair 1/1 before the datapath runs: the padded reads are
+    implementation-defined, and while their quotients would be discarded on
+    store anyway, masking keeps the kernel deterministic.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+    bm, bn = block
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+    valid = (rows < shape[0]) & (cols < shape[1])
+    one = jnp.float32(1.0)
+    a = jnp.where(valid, a_ref[...], one)
+    b = jnp.where(valid, b_ref[...], one)
+    o_ref[...] = common.divide_f32_bits(a, b, table, n, schedule)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "precision_bits", "schedule",
@@ -77,6 +121,34 @@ def tsdiv_divide_2d(a, b, *, n_iters: int = 2, precision_bits: int = 24,
     grid, spec = _grid_spec(a.shape, block)
     return pl.pallas_call(
         functools.partial(_divide_kernel, table=table, n=n_iters, schedule=schedule),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "precision_bits", "schedule",
+                                             "block", "interpret"))
+def tsdiv_divide_tiled_2d(a, b, *, n_iters: int = 2, precision_bits: int = 24,
+                          schedule: str = "factored", block=DEFAULT_BLOCK,
+                          interpret: bool = True):
+    """a / b over an arbitrary f32 (M, N) array — the streaming form.
+
+    Same fused exponent-separated datapath as :func:`tsdiv_divide_2d`, but
+    grid-scheduled directly over the native 2D layout: no flatten, no
+    pre-padding copies. Large batched operands (distance matrices, centroid
+    sums, whole activation planes) stream through VMEM one (bm, bn) tile at
+    a time; non-multiple-of-block shapes are handled by ragged last tiles
+    whose dead lanes are masked in-kernel. This is the path
+    ``kernels.ops.tsdiv_divide`` takes for rank-2 operands.
+    """
+    table = compute_segments(n_iters, precision_bits)
+    grid, spec, blk = _tiled_grid_spec(a.shape, block)
+    return pl.pallas_call(
+        functools.partial(_divide_tiled_kernel, table=table, n=n_iters,
+                          schedule=schedule, shape=a.shape, block=blk),
         grid=grid,
         in_specs=[spec, spec],
         out_specs=spec,

@@ -1,0 +1,26 @@
+"""Division-consumer workloads: the paper's "non-traditional applications".
+
+The source paper's pitch is that a fast, programmable-accuracy divider
+unlocks workloads that are traditionally restructured to *avoid* division —
+it names K-Means clustering and QR decomposition explicitly. This package
+is those workloads, built so that **every divide/rsqrt routes through
+``repro.core.division_modes``**: one ``DivisionConfig`` knob swaps the
+whole workload between the XLA-native divider and any of the paper-derived
+units (Taylor paper/factored, Goldschmidt, their fused Pallas kernels, ILM).
+
+  * ``kmeans`` — batched Lloyd iterations; the assignment distances and the
+    centroid update are the division sites (`kmeans.kmeans`).
+  * ``qr``     — QR decomposition via Givens rotations; the rotation
+    coefficients c = a/r, s = b/r are the division sites, with a choice of
+    divide-based or rsqrt-based coefficient evaluation (`qr.qr_givens`) —
+    the consumption pattern of the Givens-rotation unit of arXiv:2010.12376
+    (Hormigo & Muñoz, see PAPERS.md).
+
+Because the algorithms are mode-agnostic, the XLA-exact twin of any run is
+the same function with ``cfg=EXACT`` — accuracy deltas per mode are measured
+by ``repro.eval.workload_metrics`` and recorded by ``benchmarks/run.py``
+(``--only workloads``) into ``BENCH_div.json``.
+"""
+from . import kmeans, qr  # noqa: F401
+
+__all__ = ["kmeans", "qr"]

@@ -1,0 +1,32 @@
+"""First-class docs stay first-class: files exist, links resolve.
+
+Runs the same checker CI's docs job runs (tools/check_links.py) so a broken
+relative link in README.md / docs/*.md fails tier-1 locally, not just in CI.
+"""
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/numerics.md", "docs/architecture.md",
+                "ROADMAP.md", "BENCH_div.json"):
+        assert (REPO / rel).exists(), f"missing {rel}"
+
+
+def test_readme_covers_quickstart_and_caveat():
+    text = (REPO / "README.md").read_text()
+    # The commands a newcomer needs, and the CPU-interpret caveat readers
+    # must see before quoting any table as a TPU number.
+    for needle in ("python -m pytest", "repro.eval.conformance",
+                   "benchmarks.run", "CPU-interpret", "docs/numerics.md"):
+        assert needle in text, f"README.md lost {needle!r}"
+
+
+def test_markdown_links_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_links.py"), str(REPO)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Relative-link checker for README.md and docs/*.md (the CI docs gate).
+
+Walks every markdown link target in the checked files and fails (exit 1,
+one line per break) if a relative target does not exist on disk. External
+schemes (http/https/mailto) and pure in-page anchors are skipped — this
+gate is about repo-internal file references surviving refactors, not about
+the network.
+
+    python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)]*)\)")
+# Inside the parens: a <bracketed> or bare target, optionally followed by a
+# quoted title ([text](path "title") must still have its path checked).
+MD_TARGET = re.compile(r"^(<[^>]*>|\S+)(?:\s+(?:\"[^\"]*\"|'[^']*'))?$")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def checked_files(root: pathlib.Path) -> List[pathlib.Path]:
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def broken_links(root: pathlib.Path) -> List[Tuple[pathlib.Path, str]]:
+    broken = []
+    for f in checked_files(root):
+        for raw in MD_LINK.findall(f.read_text(encoding="utf-8")):
+            m = MD_TARGET.match(raw.strip())
+            if m is None:          # unparseable target — never skip silently
+                broken.append((f, raw))
+                continue
+            target = m.group(1).strip("<>")
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (f.parent / path).exists():
+                broken.append((f, target))
+    return broken
+
+
+def main(argv: List[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    files = checked_files(root)
+    if not files:
+        print(f"check_links: no markdown files found under {root}")
+        return 1
+    broken = broken_links(root)
+    for f, target in broken:
+        print(f"check_links: {f.relative_to(root)}: broken link -> {target}")
+    if not broken:
+        print(f"check_links: {len(files)} files ok "
+              f"({', '.join(str(f.relative_to(root)) for f in files)})")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
