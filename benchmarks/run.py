@@ -229,6 +229,42 @@ def bench_ulp_accuracy():
     RESULTS["ulp_accuracy"] = report
 
 
+def bench_rsqrt():
+    """op=rsqrt: wall-clock vs lax.rsqrt + delivered max ULP per policy.
+
+    The compensated-final-Newton rsqrt is the divide-free Givens-QR
+    formulation's datapath; this row records both its cost next to the
+    native op and its accuracy on the paired odd/even-exponent sweep
+    (machine-readable twin: the op=rsqrt cells of the conformance grid).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.division_modes import DivisionConfig, rsqrt as dmrsqrt
+    from repro.eval import ulp
+
+    n = 1 << 17 if QUICK else 1 << 20
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)) + 0.01
+    f_exact = jax.jit(jax.lax.rsqrt)
+    f_taylor = jax.jit(lambda v: dmrsqrt(v, DivisionConfig(mode="taylor")))
+    us_e = _time_us(f_exact, x)
+    us_t = _time_us(f_taylor, x)
+    print(f"rsqrt_xla,{us_e:.1f},{n}elem")
+    print(f"rsqrt_taylor,{us_t:.1f},ratio={us_t/us_e:.2f}x")
+    rows = {"rsqrt_xla_us": us_e, "rsqrt_taylor_us": us_t, "n": n}
+    sweep = np.concatenate([np.abs(ulp.sweep_logspace(4096, "float32", 5)),
+                            ulp.sweep_exponent_parity(2048, "float32", 6),
+                            ulp.sweep_rsqrt_mantissa(4096, "float32", 7)])
+    exact = 1.0 / np.sqrt(sweep.astype(np.float64))
+    mask = ulp.oracle_mask(exact) & ulp.oracle_mask(sweep.astype(np.float64))
+    for policy in ("gradual", "ftz"):
+        cfgp = DivisionConfig(mode="taylor", underflow=policy)
+        r = np.asarray(dmrsqrt(jnp.asarray(sweep), cfgp))
+        mx = float(ulp.ulp_error(r, exact, where=mask).max())
+        rows[f"max_ulp_{policy}"] = mx
+        print(f"rsqrt_taylor_{policy},0,max_ulp={mx:.3f}")
+    RESULTS["rsqrt"] = rows
+
+
 def bench_e2e_softdiv():
     """End-to-end: smoke LM forward under exact vs taylor vs ilm division."""
     import dataclasses
@@ -382,6 +418,7 @@ BENCHES = {
     "powering_hw": bench_powering_hw,
     "kernel_throughput": bench_kernel_throughput,
     "ulp_accuracy": bench_ulp_accuracy,
+    "rsqrt": bench_rsqrt,
     "e2e_softdiv": bench_e2e_softdiv,
     "workloads": bench_workloads,
     "tiled_divide": bench_tiled_divide,

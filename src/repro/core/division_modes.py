@@ -31,9 +31,11 @@ from typing import Optional
 import numpy as np
 
 from . import goldschmidt, taylor
+from .fpparts import UNDERFLOW_POLICIES
 from .seeds import compute_segments, rsqrt_seed_table
 
-__all__ = ["DivisionConfig", "recip", "div", "rsqrt", "softmax", "EXACT", "TAYLOR"]
+__all__ = ["DivisionConfig", "recip", "div", "rsqrt", "softmax", "EXACT",
+           "TAYLOR", "effective_underflow"]
 
 MODES = ("exact", "taylor", "taylor_pallas", "goldschmidt",
          "goldschmidt_pallas", "ilm")
@@ -49,10 +51,19 @@ class DivisionConfig:
     schedule: str = "factored"    # 'paper' | 'factored'
     rsqrt_newton: int = 2
     rsqrt_segments: int = 16
+    # Subnormal policy of the jnp twins: "gradual" (default) is exact IEEE
+    # gradual underflow via the bit-level datapath (core/fpparts.py);
+    # "ftz" keeps the fused kernels' hardware flush contract. The Pallas,
+    # ILM, and exact modes always deliver FTZ on this backend — see
+    # :func:`effective_underflow`.
+    underflow: str = "gradual"
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.underflow not in UNDERFLOW_POLICIES:
+            raise ValueError(
+                f"underflow {self.underflow!r} not in {UNDERFLOW_POLICIES}")
 
     @property
     def table(self):
@@ -72,6 +83,18 @@ EXACT = DivisionConfig(mode="exact")
 TAYLOR = DivisionConfig(mode="taylor")
 
 
+def effective_underflow(cfg: DivisionConfig) -> str:
+    """The subnormal policy a config actually delivers.
+
+    Only the pure-jnp twins honor ``cfg.underflow``: the fused Pallas
+    kernels flush by design (the hardware contract), the ILM emulation
+    keeps its bit-faithful legacy datapath, and mode="exact" inherits the
+    backend's behavior — FTZ/DAZ on this CPU backend, so it is reported
+    (and conformance-masked) conservatively as "ftz".
+    """
+    return cfg.underflow if cfg.mode in ("taylor", "goldschmidt") else "ftz"
+
+
 def recip(x, cfg: DivisionConfig = TAYLOR):
 
     if cfg.mode == "exact":
@@ -84,7 +107,8 @@ def recip(x, cfg: DivisionConfig = TAYLOR):
                 return kops.tsdiv_recip(x, n_iters=cfg.n_iters,
                                         precision_bits=cfg.precision_bits,
                                         schedule=cfg.schedule)
-        return taylor.reciprocal(x, cfg.table, schedule=cfg.schedule)
+        return taylor.reciprocal(x, cfg.table, schedule=cfg.schedule,
+                                 underflow=effective_underflow(cfg))
     if cfg.mode in ("goldschmidt", "goldschmidt_pallas"):
         if cfg.mode == "goldschmidt_pallas":
             from repro.kernels import ops as kops
@@ -93,7 +117,8 @@ def recip(x, cfg: DivisionConfig = TAYLOR):
                 return kops.tsdiv_recip(x, n_iters=cfg.n_iters,
                                         precision_bits=cfg.precision_bits,
                                         schedule="goldschmidt")
-        return goldschmidt.reciprocal(x, cfg.table, iters=cfg.gs_iters)
+        return goldschmidt.reciprocal(x, cfg.table, iters=cfg.gs_iters,
+                                      underflow=effective_underflow(cfg))
     if cfg.mode == "ilm":
         return _recip_ilm_jnp(x, cfg)
     raise ValueError(cfg.mode)
@@ -142,8 +167,10 @@ def div(a, b, cfg: DivisionConfig = TAYLOR):
                                      schedule=sched)
     if cfg.mode in ("goldschmidt", "goldschmidt_pallas"):
         # Goldschmidt's hallmark: the numerator rides the F-multiplies.
-        return goldschmidt.divide(a, b, cfg.table, iters=cfg.gs_iters)
-    return taylor.divide(a, b, cfg.table, schedule=cfg.schedule)
+        return goldschmidt.divide(a, b, cfg.table, iters=cfg.gs_iters,
+                                  underflow=effective_underflow(cfg))
+    return taylor.divide(a, b, cfg.table, schedule=cfg.schedule,
+                         underflow=effective_underflow(cfg))
 
 
 def rsqrt(x, cfg: DivisionConfig = TAYLOR):
@@ -151,7 +178,8 @@ def rsqrt(x, cfg: DivisionConfig = TAYLOR):
 
     if cfg.mode == "exact":
         return jax.lax.rsqrt(x)
-    return taylor.rsqrt(x, cfg.rtable, newton_iters=cfg.rsqrt_newton)
+    return taylor.rsqrt(x, cfg.rtable, newton_iters=cfg.rsqrt_newton,
+                        underflow=effective_underflow(cfg))
 
 
 def softmax(x, axis: int = -1, cfg: DivisionConfig = TAYLOR, where=None):
@@ -159,6 +187,13 @@ def softmax(x, axis: int = -1, cfg: DivisionConfig = TAYLOR, where=None):
     import jax
     import jax.numpy as jnp
 
+    x = jnp.asarray(x)
+    if x.ndim == 0:
+        # A single logit normalizes to 1 — jnp.max over axis=-1 of a scalar
+        # would raise instead of degrading gracefully.
+        return jnp.ones_like(x)
+    if x.shape[axis] == 0:
+        return x                     # no logits: empty in, empty out
     xmax = jnp.max(x, axis=axis, keepdims=True, where=where,
                    initial=-jnp.inf if where is not None else None)
     xmax = jnp.where(jnp.isfinite(xmax), xmax, 0.0)

@@ -68,7 +68,14 @@ def _refine(num0, man_b, y0, iters: int, with_recip: bool = False):
     return (n, y) if with_recip else n
 
 
-def _reciprocal_impl(xp, x, table: SeedTable, iters: int):
+def _reciprocal_impl(xp, x, table: SeedTable, iters: int,
+                     underflow: str = "gradual"):
+    if xp is not np:
+        def mantissa_fn(man):
+            y0 = seed_eval(xp, man, table)
+            return _refine(y0, man, y0, iters)
+
+        return fpparts.bit_reciprocal(x, mantissa_fn, underflow)
     sign = xp.sign(x)
     ax = xp.abs(x)
     frac, e = xp.frexp(ax)          # ax = frac * 2^e, frac in [0.5, 1)
@@ -83,8 +90,20 @@ def _reciprocal_impl(xp, x, table: SeedTable, iters: int):
     return r
 
 
-def _divide_impl(xp, a, b, table: SeedTable, iters: int):
-    """Exponent-separated joint N/D divide via the shared fpparts layer."""
+def _divide_impl(xp, a, b, table: SeedTable, iters: int,
+                 underflow: str = "gradual"):
+    """Exponent-separated joint N/D divide via the shared fpparts layer.
+
+    numpy keeps the frexp round-trip (f64 oracle); the jnp f32 path runs the
+    shared bit-level skeleton (fpparts.bit_divide) with the joint N/D
+    recurrence as the mantissa refinement.
+    """
+    if xp is not np:
+        def mantissa_fn(man_a, man_b):
+            y0 = seed_eval(xp, man_b, table)
+            return _refine(man_a * y0, man_b, y0, iters, with_recip=True)
+
+        return fpparts.bit_divide(a, b, mantissa_fn, underflow)
     s, aa, ab, man_a, man_b, ea, eb = fpparts.decompose_div(xp, a, b)
     y0 = seed_eval(xp, man_b, table)
     q_man, rb_man = _refine(man_a * y0, man_b, y0, iters,
@@ -110,22 +129,18 @@ def divide_np(a, b, table: SeedTable | None = None, *, iters: int = 2) -> np.nda
 
 # ------------------------------------------------------------------- jnp path
 
-def reciprocal(x, table: SeedTable | None = None, *, iters: int = 2):
+def reciprocal(x, table: SeedTable | None = None, *, iters: int = 2,
+               underflow: str = "gradual"):
     """Goldschmidt reciprocal in JAX. f32 compute; bf16/f16 pass through f32."""
-    import jax.numpy as jnp
-
-    from .taylor import attach_grad
-
     table = table or compute_segments(2, 24)
-    out_dtype = x.dtype
-    xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
-    r = _reciprocal_impl(jnp, xf, table, iters)
-    r = attach_grad(r, [(xf, -r * r)])
-    return r.astype(out_dtype)
+    return fpparts.jnp_reciprocal(
+        x, lambda xp, xf: _reciprocal_impl(xp, xf, table, iters, underflow))
 
 
-def divide(a, b, table: SeedTable | None = None, *, iters: int = 2):
+def divide(a, b, table: SeedTable | None = None, *, iters: int = 2,
+           underflow: str = "gradual"):
     """Goldschmidt a/b with joint N/D refinement (not a*recip(b))."""
     table = table or compute_segments(2, 24)
     return fpparts.jnp_divide(
-        a, b, lambda xp, af, bf: _divide_impl(xp, af, bf, table, iters))
+        a, b, lambda xp, af, bf: _divide_impl(xp, af, bf, table, iters,
+                                              underflow))

@@ -118,7 +118,8 @@ def divide_mantissa(xp, man_a, man_b, table: SeedTable, n: int, schedule: str):
     return q_man, rman
 
 
-def _divide_impl(xp, a, b, table: SeedTable, n: int, schedule: str):
+def _divide_impl(xp, a, b, table: SeedTable, n: int, schedule: str,
+                 underflow: str = "gradual"):
     """Exponent-separated a/b: decompose, mantissa divide, recombine, edges.
 
     Never materializes 1/b at b's exponent — the refinement stays in the
@@ -126,18 +127,36 @@ def _divide_impl(xp, a, b, table: SeedTable, n: int, schedule: str):
     the end, so the quotient is accurate whenever a/b is representable even
     where recip(b) would under/overflow. Returns (q, rb) with rb ~ 1/b for
     the analytic VJP (rb under/overflowing only zeroes the gradient lane,
-    never the primal).
+    never the primal). The numpy f64 oracle keeps the frexp round-trip
+    (numpy's frexp is subnormal-correct and the f32 corpora are normal in
+    f64); the jnp f32 path runs the bit-level skeleton, with ``underflow``
+    selecting gradual-exact or hardware-FTZ subnormal handling.
     """
-    s, aa, ab, man_a, man_b, ea, eb = fpparts.decompose_div(xp, a, b)
-    q_man, rman = divide_mantissa(xp, man_a, man_b, table, n, schedule)
-    rb = fpparts.recombine_recip(xp, rman, eb, b)
-    q = fpparts.recombine_div(xp, q_man, ea - eb, s)
-    q = fpparts.div_edges(xp, q, a, b, aa, ab, s)
-    return q, rb
+    if xp is np:
+        s, aa, ab, man_a, man_b, ea, eb = fpparts.decompose_div(xp, a, b)
+        q_man, rman = divide_mantissa(xp, man_a, man_b, table, n, schedule)
+        rb = fpparts.recombine_recip(xp, rman, eb, b)
+        q = fpparts.recombine_div(xp, q_man, ea - eb, s)
+        q = fpparts.div_edges(xp, q, a, b, aa, ab, s)
+        return q, rb
+    return fpparts.bit_divide(
+        a, b,
+        lambda man_a, man_b: divide_mantissa(xp, man_a, man_b, table, n,
+                                             schedule),
+        underflow)
 
 
-def _reciprocal_impl(xp, x, table: SeedTable, n: int, schedule: str):
-    """Full FP reciprocal: sign/exponent unpack, mantissa recip, repack, edges."""
+def _reciprocal_impl(xp, x, table: SeedTable, n: int, schedule: str,
+                     underflow: str = "gradual"):
+    """Full FP reciprocal: sign/exponent unpack, mantissa recip, repack, edges.
+
+    numpy keeps the frexp form (f64 oracle); jnp runs the bit-level skeleton
+    (see ``_divide_impl`` for the split).
+    """
+    if xp is not np:
+        return fpparts.bit_reciprocal(
+            x, lambda man: _reciprocal_mantissa(xp, man, table, n, schedule),
+            underflow)
     sign = xp.sign(x)
     ax = xp.abs(x)
     frac, e = xp.frexp(ax)          # ax = frac * 2^e, frac in [0.5, 1)
@@ -207,30 +226,63 @@ def attach_grad(r, pairs):
 
 
 def reciprocal(x, table: SeedTable | None = None, *, n_iters: int | None = None,
-               schedule: str = "factored"):
-    """Taylor-series reciprocal in JAX. f32 compute; bf16/f16 pass through f32."""
-    import jax.numpy as jnp
+               schedule: str = "factored", underflow: str = "gradual"):
+    """Taylor-series reciprocal in JAX. f32 compute; bf16/f16 pass through f32.
 
+    ``underflow="gradual"`` (default) handles subnormal operands and results
+    exactly via the bit-level datapath; ``"ftz"`` keeps the fused kernels'
+    hardware flush contract.
+    """
     table = table or default_table()
     n = table.n_iters if n_iters is None else n_iters
-    out_dtype = x.dtype
-    xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
-    r = _reciprocal_impl(jnp, xf, table, n, schedule)
-    r = attach_grad(r, [(xf, -r * r)])          # d(1/x) = -r^2 dx
-    return r.astype(out_dtype)
+    return fpparts.jnp_reciprocal(
+        x, lambda xp, xf: _reciprocal_impl(xp, xf, table, n, schedule,
+                                           underflow))
 
 
 def divide(a, b, table: SeedTable | None = None, *, n_iters: int | None = None,
-           schedule: str = "factored"):
+           schedule: str = "factored", underflow: str = "gradual"):
     """Exponent-separated a/b (never a * recip(b) — see _divide_impl)."""
     table = table or default_table()
     n = table.n_iters if n_iters is None else n_iters
     return fpparts.jnp_divide(
-        a, b, lambda xp, af, bf: _divide_impl(xp, af, bf, table, n, schedule))
+        a, b, lambda xp, af, bf: _divide_impl(xp, af, bf, table, n, schedule,
+                                              underflow))
 
 
-def _rsqrt_impl(xp, x, table: SeedTable, newton_iters: int):
-    """1/sqrt(x): even/odd exponent split onto [0.5, 2), PWL seed, Newton."""
+def _newton_rsqrt(u, y, newton_iters: int):
+    """Newton refinement of y ~ rsqrt(u), final step residual-compensated.
+
+    Plain Newton steps y <- y*(1.5 - 0.5*u*y^2) leave ~2 ULP of accumulated
+    rounding; the last step instead computes the residual r = 1 - u*y^2
+    error-free (two Dekker two-products: y^2 = hp + he exactly, then
+    u*hp = p2 + e2 exactly, and 1 - p2 is Sterbenz-exact since p2 ~ 1) and
+    applies y <- y + y*(r/2) — one rounding on a tiny correction, which
+    lands the result within ~0.5 ULP. Pure operator arithmetic: serves the
+    f64 numpy oracle and the jnp f32 twin alike.
+    """
+    for _ in range(max(newton_iters - 1, 0)):
+        y = y * (1.5 - 0.5 * u * y * y)
+    if newton_iters > 0:
+        hp, he = fpparts.two_product(y, y)
+        p2, e2 = fpparts.two_product(u, hp)
+        r = ((1.0 - p2) - e2) - u * he
+        y = y + y * (0.5 * r)
+    return y
+
+
+def _rsqrt_impl(xp, x, table: SeedTable, newton_iters: int,
+                underflow: str = "gradual"):
+    """1/sqrt(x): even/odd exponent split onto [0.5, 2), PWL seed, Newton.
+
+    numpy keeps the frexp form (f64 oracle); jnp splits the fields at bit
+    level so subnormal operands are normalized exactly (rsqrt of every
+    positive subnormal is a mid-range normal, so the *result* side never
+    underflows — ``underflow`` only selects whether subnormal operands are
+    exact ("gradual") or the hardware zero class ("ftz", -> +-inf).
+    """
+    if xp is not np:
+        return _rsqrt_bits(x, table, newton_iters, underflow)
     frac, e = xp.frexp(x)           # x = frac * 2^e, frac in [0.5, 1)
     # s = floor(e/2); u = frac * 2^(e - 2s) in [0.5, 2);  rsqrt(x) = rsqrt(u) * 2^-s
     s = e >> 1
@@ -239,8 +291,7 @@ def _rsqrt_impl(xp, x, table: SeedTable, newton_iters: int):
     idx = xp.sum((u[..., None] >= inner).astype(np.int32), axis=-1)
     y = xp.take(table.slopes.astype(u.dtype), idx) * u + xp.take(
         table.intercepts.astype(u.dtype), idx)
-    for _ in range(newton_iters):
-        y = y * (1.5 - 0.5 * u * y * y)
+    y = _newton_rsqrt(u, y, newton_iters)
     r = xp.ldexp(y, -s)
     # IEEE edges (matches jax.lax.rsqrt): +-0 -> +-inf, +inf -> +0,
     # x < 0 (incl. -inf) -> nan, nan -> nan.
@@ -251,12 +302,55 @@ def _rsqrt_impl(xp, x, table: SeedTable, newton_iters: int):
     return r
 
 
-def rsqrt(x, table: SeedTable | None = None, *, newton_iters: int = 2):
+def _rsqrt_bits(x, table: SeedTable, newton_iters: int, underflow: str):
+    """jnp f32 rsqrt body on raw bit fields (subnormal-exact decompose).
+
+    Reproduces the frexp form's arithmetic exactly on normal operands (same
+    u in [0.5, 2), same Newton steps, same exact power-of-two recombine —
+    rsqrt results always land in ~[2^-64, 2^75], so no repack rounding is
+    ever needed) while normalizing subnormal operands correctly.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    bits = lax.bitcast_convert_type(x, jnp.uint32)
+    mag = bits & fpparts.F32_MAG_MASK
+    sign_bits = bits & fpparts.F32_SIGN
+    x_zero = mag < fpparts.F32_IMPLICIT if underflow == "ftz" else mag == 0
+    x_inf, x_nan = mag == fpparts.F32_EXP_MASK, mag > fpparts.F32_EXP_MASK
+    man, e = fpparts.split_f32(mag)                  # |x| = man * 2^e
+    man = jnp.where(man == 0, jnp.float32(1.0), man)
+    ef = e + 1                                       # frexp convention
+    s = ef >> 1                                      # floor(ef / 2)
+    odd = ef - 2 * s                                 # 0 or 1
+    # u = (man/2) * 2^odd in [0.5, 2): exact scalings only.
+    u = jnp.where(odd == 1, man, man * jnp.float32(0.5))
+    inner = table.inner_boundaries.astype(np.float32)
+    idx = jnp.sum((u[..., None] >= inner).astype(np.int32), axis=-1)
+    y = jnp.take(table.slopes.astype(np.float32), idx) * u + jnp.take(
+        table.intercepts.astype(np.float32), idx)
+    y = _newton_rsqrt(u, y, newton_iters)
+    pw = lax.bitcast_convert_type(
+        jnp.clip(127 - s, 1, 254).astype(jnp.uint32) << 23, jnp.float32)
+    r = y * pw                                       # exact: result is normal
+    inf_s = lax.bitcast_convert_type(
+        fpparts.F32_EXP_MASK | sign_bits, jnp.float32)
+    r = jnp.where(x_zero, inf_s, r)                  # +-0 -> +-inf
+    r = jnp.where(x_inf, jnp.float32(0.0), r)        # +inf -> +0
+    neg = (sign_bits != 0) & ~x_zero                 # x < 0 (incl. -inf) -> nan
+    return jnp.where(neg | x_nan, jnp.float32(np.nan), r)
+
+
+def rsqrt(x, table: SeedTable | None = None, *, newton_iters: int = 2,
+          underflow: str = "gradual"):
     import jax.numpy as jnp
 
     table = table or rsqrt_seed_table()
+    x = jnp.asarray(x)
     out_dtype = x.dtype
     xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
-    r = _rsqrt_impl(jnp, xf, table, newton_iters)
+    r = _rsqrt_impl(jnp, xf, table, newton_iters, underflow)
+    # attach_grad is safe here (unlike divide/recip): rsqrt primals are
+    # always normal-range, so the straight-through arithmetic cannot flush.
     r = attach_grad(r, [(xf, -0.5 * r * r * r)])    # d(x^-1/2) = -r^3/2 dx
     return r.astype(out_dtype)

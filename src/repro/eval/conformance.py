@@ -9,7 +9,12 @@ stratified operand corpus (eval/ulp.py) and emits a machine-readable report:
 
 The five algorithm families on identical footing: exact (XLA), Taylor with
 the paper's §6 schedule, Taylor factored, Goldschmidt (core/goldschmidt.py,
-plus its fused-kernel twin), and the 16-bit ILM emulation. Consumed by
+plus its fused-kernel twin), and the 16-bit ILM emulation; op in
+{recip, div, rsqrt}. Masking is underflow-policy-aware: gradual cells (the
+bit-level jnp twins) measure subnormal operands and results, FTZ cells
+exclude them as the flush edge class. The process exits non-zero if any
+cell fails its gate (edge contract, or > 2 max ULP at the n >= 2 non-ILM
+operating points), so CI can consume the run directly. Consumed by
 tests/test_conformance.py (the paper's eq. 17 precision claim as a hard
 gate) and benchmarks/run.py (bench_ulp_accuracy).
 """
@@ -24,15 +29,21 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.division_modes import DivisionConfig, div, recip
+from repro.core.division_modes import (DivisionConfig, div, recip, rsqrt,
+                                       effective_underflow)
 from repro.core.seeds import compute_segments
 from . import ulp
 
 __all__ = ["Cell", "default_grid", "run_cell", "run_conformance",
-           "format_table", "main"]
+           "format_table", "cell_gate", "main"]
 
 # (n_iters, precision_bits) operating points: the paper's accuracy dial.
 DIAL = ((1, 12), (2, 24), (3, 30))
+
+# The eq. 17 operating point: every non-ILM cell at n >= 2 must deliver
+# <= 2 max ULP (the paper's gate); n=1 @ 12-bit is the loose end of the
+# dial by design and is not ULP-gated. ILM is ~12-bit by construction.
+GATE_MAX_ULP = 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +71,13 @@ class Cell:
 
 def default_grid(dtypes: Sequence[str] = ulp.DTYPES,
                  dial: Sequence = DIAL, quick: bool = False) -> List[Cell]:
-    """Every (op x mode x schedule x n_iters x dtype) cell of the grid."""
+    """Every (op x mode x schedule x n_iters x dtype) cell of the grid.
+
+    op=rsqrt runs at the f32 operating point only (rsqrt's accuracy dial is
+    ``rsqrt_newton``, not the series depth, and the Pallas modes share the
+    jnp rsqrt datapath — so exact/taylor/goldschmidt are the distinct
+    columns).
+    """
     if quick:
         dial = [d for d in dial if d == (2, 24)] or [dial[0]]
     cells: List[Cell] = []
@@ -75,6 +92,10 @@ def default_grid(dtypes: Sequence[str] = ulp.DTYPES,
                 cells.append(Cell("goldschmidt_pallas", "-", n, p, dt, op=op))
             # ILM carries ~12 mantissa bits by construction — one cell each.
             cells.append(Cell("ilm", "-", 2, 24, dt, op=op))
+        cells.append(Cell("exact", dtype=dt, op="rsqrt"))
+        for sched in ("paper", "factored"):
+            cells.append(Cell("taylor", sched, 2, 24, dt, op="rsqrt"))
+        cells.append(Cell("goldschmidt", "-", 2, 24, dt, op="rsqrt"))
     return cells
 
 
@@ -133,12 +154,41 @@ def _div_edge_failures(a64: np.ndarray, b64: np.ndarray,
     return fails
 
 
+def _rsqrt_edge_failures(x64: np.ndarray, r64: np.ndarray) -> int:
+    """IEEE contract for rsqrt on the edge corpus.
+
+    ±0 -> ±inf, +inf -> +0, x < 0 (incl. -inf) -> nan, nan -> nan.
+    Subnormal-magnitude operands are policy-dependent (gradual: exact;
+    FTZ: the zero class -> ±inf) and are judged by the ULP strata /
+    policy tests instead.
+    """
+    subn = np.isfinite(x64) & (x64 != 0) & (np.abs(x64) < np.ldexp(1.0, -126))
+    fails = 0
+    zero = (x64 == 0) & ~subn
+    fails += int(np.sum(zero & ~(np.isinf(r64)
+                                 & (np.signbit(r64) == np.signbit(x64)))))
+    fails += int(np.sum(np.isposinf(x64)
+                        & ~((r64 == 0) & ~np.signbit(r64))))
+    neg = (x64 < 0) & ~subn
+    fails += int(np.sum(neg & ~np.isnan(r64)))
+    fails += int(np.sum(np.isnan(x64) & ~np.isnan(r64)))
+    return fails
+
+
 def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
              seed: int = 0) -> Dict:
-    """Measure one cell over the stratified sweep; returns a report dict."""
+    """Measure one cell over the stratified sweep; returns a report dict.
+
+    Masks are policy-aware: cells whose delivered underflow policy is
+    "gradual" (the bit-level jnp twins) keep subnormal operands and
+    gradual-underflow results *inside* the ULP statistics — exactness there
+    is the point of the datapath — while FTZ cells (fused kernels, ILM,
+    XLA-native exact on this backend) exclude them as the flush edge class.
+    """
     import jax.numpy as jnp
 
     cfg = cell.config()
+    gradual = effective_underflow(cfg) == "gradual"
     table = compute_segments(cell.n_iters, cell.precision_bits)
     t0 = time.perf_counter()
     per_stratum: Dict[str, Dict] = {}
@@ -147,10 +197,27 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
 
     def measure(name: str, r_np: np.ndarray, exact: np.ndarray,
                 mask: np.ndarray) -> None:
-        """Shared per-stratum bookkeeping for both ops."""
+        """Shared per-stratum bookkeeping for all ops."""
         errs = ulp.ulp_error(r_np, exact, cell.dtype, where=mask)
         per_stratum[name] = ulp.summarize(errs, mask)
         agg.append(errs[mask])
+
+    def operand_mask(x64: np.ndarray) -> np.ndarray:
+        m = ulp.oracle_mask(x64, cell.dtype)
+        if gradual:
+            m = m | ulp.subnormal_mask(x64, cell.dtype)
+        return m
+
+    def result_mask(exact: np.ndarray, cliffs: bool) -> np.ndarray:
+        m = ulp.oracle_mask(exact, cell.dtype)
+        if cliffs:
+            m = m & (ulp.cliff_guard(exact, cell.dtype) if not gradual
+                     else ulp.overflow_guard(exact, cell.dtype))
+        if gradual:
+            # Gradual cells measure subnormal exact results too (the RNE
+            # integer repack rounds into the subnormal lattice).
+            m = m | ulp.subnormal_mask(exact, cell.dtype)
+        return m
 
     if cell.op == "div":
         pairs = ulp.div_sweep(cell.dtype, n_log=n_log, n_man=n_man,
@@ -162,14 +229,12 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
             q_np = np.asarray(q)
             with np.errstate(divide="ignore", invalid="ignore"):
                 exact = a64 / b64
-            # ULP stats where the exact quotient AND both operands are
-            # normal; subnormal operands/results are the FTZ edge class,
-            # and quotients within 2 ULP of the under/overflow cliffs are
-            # guard-banded (a <= 2 ULP unit may flush/overflow them).
-            mask = (ulp.oracle_mask(exact, cell.dtype)
-                    & ulp.cliff_guard(exact, cell.dtype)
-                    & ulp.oracle_mask(a64, cell.dtype)
-                    & ulp.oracle_mask(b64, cell.dtype))
+            # FTZ cells: ULP stats where the exact quotient AND both
+            # operands are normal, quotients within 2 ULP of the cliffs
+            # guard-banded. Gradual cells: subnormal operands/results are
+            # measured; only the overflow cliff keeps its guard band.
+            mask = (result_mask(exact, cliffs=True)
+                    & operand_mask(a64) & operand_mask(b64))
             measure(name, q_np, exact, mask)
             if name == "subnormals":
                 # FTZ signature on subnormal denominators: flushed-b lanes
@@ -180,6 +245,25 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
             if name == "edges":
                 edge_fail = _div_edge_failures(a64, b64,
                                                q_np.astype(np.float64))
+    elif cell.op == "rsqrt":
+        strata = ulp.rsqrt_sweep(cell.dtype, n_log=n_log, n_man=n_man,
+                                 seed=seed)
+        for name, xs in strata.items():
+            x64 = np.asarray(xs).astype(np.float64)
+            r_np = np.asarray(rsqrt(jnp.asarray(xs), cfg))
+            with np.errstate(divide="ignore", invalid="ignore"):
+                exact = 1.0 / np.sqrt(x64)     # x<0 -> nan, 0 -> inf
+            # rsqrt never under/overflows on normal or subnormal operands,
+            # so no cliff guards apply.
+            mask = result_mask(exact, cliffs=False) & operand_mask(x64)
+            measure(name, r_np, exact, mask)
+            if name == "subnormals":
+                r64 = r_np.astype(np.float64)
+                per_stratum[name]["ftz_frac"] = float(
+                    np.mean(np.isinf(r64) | (r64 == 0)))
+            if name == "edges":
+                edge_fail = _rsqrt_edge_failures(x64,
+                                                 r_np.astype(np.float64))
     else:
         strata = ulp.stratified_sweep(cell.dtype, n_log=n_log, n_man=n_man,
                                       boundaries=table.boundaries, seed=seed)
@@ -189,11 +273,7 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
             r_np = np.asarray(r)
             with np.errstate(divide="ignore", invalid="ignore"):
                 exact = 1.0 / x64          # IEEE: +-0 -> +-inf, +-inf -> +-0
-            # ULP stats are defined where the exact result is a normal number
-            # AND every operand is normal: XLA (like the hardware unit)
-            # flushes subnormal operands to zero — an FTZ edge class.
-            mask = (ulp.oracle_mask(exact, cell.dtype)
-                    & ulp.oracle_mask(x64, cell.dtype))
+            mask = result_mask(exact, cliffs=gradual) & operand_mask(x64)
             measure(name, r_np, exact, mask)
             if name == "subnormals":
                 per_stratum[name]["ftz_frac"] = float(
@@ -204,11 +284,13 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
     out = dataclasses.asdict(cell)
     out.update({
         "key": cell.key,
+        "underflow": effective_underflow(cfg),
         "overall": ulp.summarize(allv),
         "strata": per_stratum,
         "edge_failures": edge_fail,
         "seconds": round(time.perf_counter() - t0, 3),
     })
+    out["pass"] = cell_gate(out)
     return out
 
 
@@ -235,6 +317,22 @@ def run_conformance(cells: Optional[Sequence[Cell]] = None, *,
     return report
 
 
+def cell_gate(cell_report: Dict) -> bool:
+    """Pass/fail verdict for one measured cell.
+
+    Every cell must honor the IEEE edge contract (edge_failures == 0) and
+    produce finite ULP statistics; non-ILM cells at n_iters >= 2 must
+    additionally deliver the paper's eq. 17 gate (<= 2 max ULP). The
+    n=1 @ 12-bit dial point is the deliberately-loose end of the accuracy
+    dial and is not ULP-gated.
+    """
+    o = cell_report["overall"]
+    ok = cell_report["edge_failures"] == 0 and np.isfinite(o["max_ulp"])
+    if cell_report["mode"] != "ilm" and cell_report["n_iters"] >= 2:
+        ok = ok and o["max_ulp"] <= GATE_MAX_ULP
+    return bool(ok)
+
+
 def cell_lookup(report: Dict, **kw) -> Dict:
     """First report cell matching all given field values (mode=, dtype=, ...)."""
     for c in report["cells"]:
@@ -246,16 +344,18 @@ def cell_lookup(report: Dict, **kw) -> Dict:
 def format_table(report: Dict) -> str:
     """Human-readable mode x schedule x n_iters ULP table."""
     hdr = (f"{'op':5s} {'mode':18s} {'schedule':10s} {'n':>2s} {'bits':>4s} "
-           f"{'dtype':9s} {'max_ulp':>10s} {'mean_ulp':>10s} {'p99':>8s} "
-           f"{'edges':>5s}")
+           f"{'dtype':9s} {'uflow':7s} {'max_ulp':>10s} {'mean_ulp':>10s} "
+           f"{'p99':>8s} {'edges':>5s} {'gate':>5s}")
     lines = [hdr, "-" * len(hdr)]
     for c in report["cells"]:
         o = c["overall"]
         lines.append(
             f"{c['op']:5s} {c['mode']:18s} {c['schedule']:10s} "
             f"{c['n_iters']:2d} {c['precision_bits']:4d} {c['dtype']:9s} "
+            f"{c.get('underflow', '-'):7s} "
             f"{o['max_ulp']:10.3f} {o['mean_ulp']:10.4f} {o['p99_ulp']:8.3f} "
-            f"{'ok' if c['edge_failures'] == 0 else c['edge_failures']:>5}")
+            f"{'ok' if c['edge_failures'] == 0 else c['edge_failures']:>5} "
+            f"{'pass' if c.get('pass', True) else 'FAIL':>5}")
     return "\n".join(lines)
 
 
@@ -285,6 +385,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1)
         print(f"# wrote {args.json}")
+    failing = [c["key"] for c in report["cells"] if not c.get("pass", True)]
+    if failing:
+        print(f"# CONFORMANCE FAILURES ({len(failing)} cells):")
+        for k in failing:
+            print(f"#   {k}")
+        return 1
     return 0
 
 

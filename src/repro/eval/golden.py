@@ -6,8 +6,9 @@ division-mode cells; the resulting f32 *bit patterns* are committed as an
 ULPs (default tolerance 0 — any numerics change must be deliberate and
 regenerate the vectors):
 
-    PYTHONPATH=src python -m repro.eval.golden --check
+    PYTHONPATH=src python -m repro.eval.golden --check   # recip+divide+rsqrt
     PYTHONPATH=src python -m repro.eval.golden --generate   # after a deliberate change
+    PYTHONPATH=src python -m repro.eval.golden --check --store rsqrt
 
 tests/test_conformance.py runs the check in tier-1, so an accidental change
 to seeds, schedules, the compensated residual, or the kernels shows up as a
@@ -25,12 +26,15 @@ import numpy as np
 
 from . import ulp
 
-__all__ = ["GOLDEN_PATH", "DIVIDE_PATH", "golden_cells", "golden_inputs",
-           "golden_div_cells", "golden_div_inputs", "generate",
-           "generate_divide", "check", "check_divide"]
+__all__ = ["GOLDEN_PATH", "DIVIDE_PATH", "RSQRT_PATH", "golden_cells",
+           "golden_inputs", "golden_div_cells", "golden_div_inputs",
+           "golden_rsqrt_cells", "golden_rsqrt_inputs", "generate",
+           "generate_divide", "generate_rsqrt", "check", "check_divide",
+           "check_rsqrt"]
 
 GOLDEN_PATH = Path(__file__).parent / "golden" / "reciprocal_v1.npz"
 DIVIDE_PATH = Path(__file__).parent / "golden" / "divide_v1.npz"
+RSQRT_PATH = Path(__file__).parent / "golden" / "rsqrt_v1.npz"
 
 
 def golden_cells() -> List[Tuple[str, Dict]]:
@@ -114,15 +118,41 @@ def golden_div_inputs() -> Tuple[np.ndarray, np.ndarray]:
     return a, b
 
 
+def golden_rsqrt_cells() -> List[Tuple[str, Dict]]:
+    """op=rsqrt cells: the Newton dial, mode dispatch, and both underflow
+    policies (the subnormal stratum differs between them by design)."""
+    return [
+        ("rsqrt/taylor/newton2", dict(mode="taylor")),
+        ("rsqrt/taylor/newton3", dict(mode="taylor", rsqrt_newton=3)),
+        ("rsqrt/goldschmidt/newton2", dict(mode="goldschmidt")),
+        ("rsqrt/taylor/newton2/ftz", dict(mode="taylor", underflow="ftz")),
+    ]
+
+
+def golden_rsqrt_inputs() -> np.ndarray:
+    """Deterministic f32 rsqrt corpus: positive logspace over both exponent
+    parities, mantissa-dense [1, 4), IEEE edges, subnormal operands."""
+    parts = [
+        np.abs(ulp.sweep_logspace(256, "float32", seed=301)),
+        ulp.sweep_exponent_parity(128, "float32", seed=302),
+        ulp.sweep_rsqrt_mantissa(96, "float32", seed=303),   # grid+jitter
+        ulp.sweep_edges("float32"),
+        np.abs(ulp.sweep_subnormals(32, "float32", seed=304)),
+    ]
+    return np.concatenate(parts).astype(np.float32)
+
+
 def _compute(key: str, kw: Dict, x: np.ndarray, a: np.ndarray) -> np.ndarray:
     import jax.numpy as jnp
 
-    from repro.core.division_modes import DivisionConfig, div, recip
+    from repro.core.division_modes import DivisionConfig, div, recip, rsqrt
 
     cfg = DivisionConfig(**kw)
     xj = jnp.asarray(x)
     if key.startswith("div/"):
         out = div(jnp.asarray(a), xj, cfg)
+    elif key.startswith("rsqrt/"):
+        out = rsqrt(xj, cfg)
     else:
         out = recip(xj, cfg)
     return np.asarray(out, np.float32)
@@ -161,6 +191,49 @@ def generate_divide(path: Path = DIVIDE_PATH) -> Path:
     return path
 
 
+def generate_rsqrt(path: Path = RSQRT_PATH) -> Path:
+    """Recompute every rsqrt cell and (over)write the committed vectors."""
+    import jax
+
+    x = golden_rsqrt_inputs()
+    arrays = {"inputs": x}
+    for key, kw in golden_rsqrt_cells():
+        arrays["out:" + key] = _compute(key, kw, x, x).view(np.uint32)
+    arrays["meta"] = np.frombuffer(json.dumps({
+        "version": 1, "jax": jax.__version__, "numpy": np.__version__,
+    }).encode(), np.uint8)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(path, **arrays)
+    return path
+
+
+def check_rsqrt(path: Path = RSQRT_PATH, tolerance_ulp: int = 0) -> List[Dict]:
+    """Recompute the rsqrt store and diff. Returns failures (empty = pass)."""
+    if not path.exists():
+        return [{"cell": "rsqrt store", "error": f"missing {path} — run "
+                 "`python -m repro.eval.golden --generate --store rsqrt`"}]
+    with np.load(path) as z:
+        x = z["inputs"]
+        stored = {k[len("out:"):]: z[k] for k in z.files if k.startswith("out:")}
+    failures: List[Dict] = []
+    for key, kw in golden_rsqrt_cells():
+        if key not in stored:
+            failures.append({"cell": key, "error": "missing from store"})
+            continue
+        want = stored[key].view(np.float32)
+        got = _compute(key, kw, x, x)
+        d = ulp.ulp_diff(got, want)
+        bad = d > tolerance_ulp
+        if bad.any():
+            failures.append({
+                "cell": key,
+                "n_mismatch": int(bad.sum()),
+                "max_ulp_drift": int(d.max()),
+                "first_input": float(x[np.argmax(d)]),
+            })
+    return failures
+
+
 def check_divide(path: Path = DIVIDE_PATH, tolerance_ulp: int = 0) -> List[Dict]:
     """Recompute the divide store and diff. Returns failures (empty = pass)."""
     if not path.exists():
@@ -191,6 +264,9 @@ def check_divide(path: Path = DIVIDE_PATH, tolerance_ulp: int = 0) -> List[Dict]
 
 def check(path: Path = GOLDEN_PATH, tolerance_ulp: int = 0) -> List[Dict]:
     """Recompute and diff against the store. Returns failures (empty = pass)."""
+    if not path.exists():
+        return [{"cell": "reciprocal store", "error": f"missing {path} — run "
+                 "`python -m repro.eval.golden --generate --store recip`"}]
     with np.load(path) as z:
         x = z["inputs"]
         a = z["numerators"] if "numerators" in z.files else golden_numerators(x.size)
@@ -218,12 +294,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--generate", action="store_true")
     ap.add_argument("--check", action="store_true")
-    ap.add_argument("--store", choices=("recip", "divide", "all"),
+    ap.add_argument("--store", choices=("recip", "divide", "rsqrt", "all"),
                     default="all", help="which committed store(s) to act on")
     ap.add_argument("--tolerance-ulp", type=int, default=0)
     args = ap.parse_args(argv)
     do_recip = args.store in ("recip", "all")
     do_divide = args.store in ("divide", "all")
+    do_rsqrt = args.store in ("rsqrt", "all")
     if args.generate:
         if do_recip:
             p = generate()
@@ -234,19 +311,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"wrote {p} ({p.stat().st_size} bytes, "
                   f"{len(golden_div_cells())} cells x "
                   f"{golden_div_inputs()[0].size} pairs)")
+        if do_rsqrt:
+            p = generate_rsqrt()
+            print(f"wrote {p} ({p.stat().st_size} bytes, "
+                  f"{len(golden_rsqrt_cells())} cells x "
+                  f"{golden_rsqrt_inputs().size} points)")
         return 0
     failures: List[Dict] = []
     if do_recip:
         failures += check(tolerance_ulp=args.tolerance_ulp)
     if do_divide:
         failures += check_divide(tolerance_ulp=args.tolerance_ulp)
+    if do_rsqrt:
+        failures += check_rsqrt(tolerance_ulp=args.tolerance_ulp)
     if failures:
         print("GOLDEN-VECTOR REGRESSION:")
         for f in failures:
             print(f"  {f}")
         return 1
     n = (len(golden_cells()) if do_recip else 0) + (
-        len(golden_div_cells()) if do_divide else 0)
+        len(golden_div_cells()) if do_divide else 0) + (
+        len(golden_rsqrt_cells()) if do_rsqrt else 0)
     print(f"golden vectors ok ({n} cells)")
     return 0
 

@@ -28,10 +28,12 @@ import numpy as np
 
 __all__ = [
     "DTYPES", "ulp_size", "to_ordered", "ulp_diff", "ulp_error",
-    "oracle_mask", "cliff_guard", "sweep_logspace", "sweep_mantissa",
+    "oracle_mask", "subnormal_mask", "cliff_guard", "overflow_guard",
+    "sweep_logspace", "sweep_mantissa",
     "sweep_boundaries", "sweep_edges", "sweep_subnormals", "stratified_sweep",
     "summarize", "sweep_ratio_extremes", "sweep_quotient_edges",
-    "div_edge_pairs", "div_sweep",
+    "div_edge_pairs", "div_sweep", "sweep_rsqrt_mantissa",
+    "sweep_exponent_parity", "rsqrt_sweep",
 ]
 
 
@@ -109,6 +111,32 @@ def oracle_mask(exact: np.ndarray, dtype="float32") -> np.ndarray:
     # Largest finite: (2 - 2^(1-p)) * 2^emax.
     big = np.ldexp(2.0 - 2.0 ** (1 - p), emax)
     return np.isfinite(ax) & (ax >= tiny) & (ax <= big)
+
+
+def subnormal_mask(x: np.ndarray, dtype="float32") -> np.ndarray:
+    """Finite nonzero values strictly below the smallest normal of ``dtype``.
+
+    Under the gradual-underflow policy these lanes carry exact ULP
+    statistics (the bit-level jnp datapath normalizes/rounds them); under
+    FTZ they are the flush edge class and stay excluded.
+    """
+    p, emin, _ = _fmt(dtype)
+    ax = np.abs(np.asarray(x, np.float64))
+    return np.isfinite(ax) & (ax > 0) & (ax < np.ldexp(1.0, emin))
+
+
+def overflow_guard(exact: np.ndarray, dtype="float32",
+                   ulps: float = 2.0) -> np.ndarray:
+    """The overflow half of :func:`cliff_guard` on its own.
+
+    Gradual-underflow cells have no flush cliff at the bottom of the normal
+    range — quotients there round into the subnormal lattice and are
+    measured — so only the largest-finite cliff needs guard-banding.
+    """
+    p, emin, emax = _fmt(dtype)
+    ax = np.abs(np.asarray(exact, np.float64))
+    big = np.ldexp(2.0 - 2.0 ** (1 - p), emax)
+    return ax <= big - ulps * np.ldexp(1.0, emax - p + 1)
 
 
 def cliff_guard(exact: np.ndarray, dtype="float32",
@@ -333,6 +361,67 @@ def div_sweep(dtype="float32", n_log: int = 4096, n_man: int = 4096,
         a_bnd = sweep_logspace(b_bnd.size, dtype, seed + 5).astype(dt)
         strata["boundaries"] = (a_bnd[:b_bnd.size], b_bnd)
     return strata
+
+
+# ------------------------------------------------------------- rsqrt sweeps
+#
+# rsqrt is a single-operand op, but its hard cases are structured by the
+# exponent's *parity* (the datapath splits even/odd exponents onto one seed
+# octave) and by the two-octave mantissa domain [1, 4): a corpus that only
+# covers [1, 2) never exercises the odd-exponent half of the seed table.
+
+def sweep_rsqrt_mantissa(n: int = 4096, dtype="float32",
+                         seed: int = 5) -> np.ndarray:
+    """Dense coverage of [1, 2) ∪ [2, 4): grid + jitter over both octaves.
+
+    rsqrt folds its operand onto one reduced interval per exponent *parity*,
+    so the mantissa-dense corpus must span two octaves where the reciprocal
+    corpus needs one.
+    """
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    grid_lo = 1.0 + np.arange(half) / half           # [1, 2)
+    grid_hi = 2.0 + 2.0 * np.arange(n - half) / (n - half)   # [2, 4)
+    jit = 1.0 + 3.0 * rng.random(n)                  # [1, 4)
+    return np.concatenate([grid_lo, grid_hi, jit]).astype(_resolve_dtype(dtype))
+
+
+def sweep_exponent_parity(n: int = 2048, dtype="float32",
+                          seed: int = 6) -> np.ndarray:
+    """Positive operands split half even / half odd unbiased exponents.
+
+    The rsqrt exponent is halved (2^e -> 2^-e/2), with the parity bit folded
+    into the mantissa domain; this stratum pins both halves of that split
+    across the full exponent range, including exact powers of two.
+    """
+    p, emin, emax = _fmt(dtype)
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    e_even = 2 * rng.integers(emin // 2 + 1, emax // 2, half)
+    e_odd = 2 * rng.integers(emin // 2 + 1, emax // 2, n - half) + 1
+    e = np.concatenate([e_even, e_odd]).astype(np.float64)
+    man = np.concatenate([np.ones(n // 4),                  # exact 2^e
+                          1.0 + rng.random(n - n // 4)])    # jittered
+    return (man[:n] * np.exp2(e)).astype(_resolve_dtype(dtype))
+
+
+def rsqrt_sweep(dtype="float32", n_log: int = 4096, n_man: int = 4096,
+                seed: int = 0) -> Dict[str, np.ndarray]:
+    """The standard rsqrt operand corpus, one array per stratum.
+
+    Positive-only ULP strata (negatives are a nan contract, covered by the
+    ``edges`` stratum), plus the subnormal stratum — rsqrt of every positive
+    subnormal is a mid-range normal, so under gradual underflow these lanes
+    carry exact ULP statistics rather than an FTZ class.
+    """
+    return {
+        "logspace": np.abs(sweep_logspace(n_log, dtype, seed)),
+        "exp_parity": sweep_exponent_parity(max(n_log // 2, 16), dtype,
+                                            seed + 11),
+        "mantissa": sweep_rsqrt_mantissa(n_man, dtype, seed + 12),
+        "edges": sweep_edges(dtype),
+        "subnormals": np.abs(sweep_subnormals(256, dtype, seed + 13)),
+    }
 
 
 def summarize(errs: np.ndarray, mask: np.ndarray | None = None) -> Dict[str, float]:

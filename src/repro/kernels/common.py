@@ -12,10 +12,13 @@ import jax.numpy as jnp
 
 from repro.core.seeds import SeedTable, compute_segments, rsqrt_seed_table
 
-F32_SIGN = np.uint32(0x8000_0000)
-F32_EXP_MASK = np.uint32(0x7F80_0000)
-F32_MAN_MASK = np.uint32(0x007F_FFFF)
-F32_ONE_BITS = np.uint32(0x3F80_0000)
+# One source of truth for the f32 field layout: the jnp twins' bit-level
+# datapath (core/fpparts.py) and these kernel bodies must stay aligned
+# field-for-field — the underflow="ftz" twins are pinned bit-identical to
+# the fused kernels by tests/test_underflow_policy.py.
+from repro.core.fpparts import (  # noqa: F401  (re-exported kernel-side)
+    F32_SIGN, F32_EXP_MASK, F32_MAN_MASK, F32_ONE_BITS, F32_IMPLICIT,
+)
 
 
 def seed_ladder(man: jax.Array, table: SeedTable) -> jax.Array:

@@ -73,8 +73,10 @@ def _recip_fwd(x, n_iters, precision_bits, schedule):
 
 
 def _recip_bwd(n_iters, precision_bits, schedule, r, g):
-    # Edge lanes (r = ±inf at x = 0) get zero gradient, not 0*inf = nan —
-    # same contract as taylor.attach_grad on the jnp path.
+    # Edge lanes (r = ±inf at x = 0, which under the kernels' FTZ contract
+    # includes subnormal operands flushed to the zero class) get zero
+    # gradient, not 0*inf = nan — same contract as the jnp twins'
+    # custom_jvp rule (fpparts.jnp_reciprocal).
     rf = jnp.where(jnp.isfinite(r), r, 0.0)
     return (-(g * rf * rf),)
 
@@ -134,8 +136,11 @@ def _divide_fwd(a, b, n_iters, precision_bits, schedule):
 def _divide_bwd(n_iters, precision_bits, schedule, res, g):
     q, b = res
     rb = tsdiv_recip(b, n_iters, precision_bits, schedule)
-    # Mask edge lanes (q or 1/b non-finite) to zero gradient, as
-    # taylor.attach_grad does for the jnp twins.
+    # Mask edge lanes to zero gradient, as the jnp twins' custom_jvp
+    # rule (fpparts.jnp_divide) does. Under the kernels' FTZ contract this
+    # covers the subnormal lanes too: a subnormal b is the zero class, so
+    # q and rb come back ±inf there and the whole lane is masked rather
+    # than poisoned with 0*inf = nan.
     rb = jnp.where(jnp.isfinite(rb), rb, 0.0)
     qf = jnp.where(jnp.isfinite(q), q, 0.0)
     return (g * rb, -(g * qf * rb))

@@ -181,22 +181,21 @@ def test_div_mixed_dtype_promotes(mode):
 
 
 @pytest.mark.parametrize("mode", ["taylor", "goldschmidt"])
-def test_div_subnormal_edge_class_jnp_modes(mode):
-    """The jnp twins' subnormal contract: subnormal *quotients* from normal
-    operands flush to signed zero (ldexp underflow), and subnormal
-    *operands* are a degraded FTZ edge class (XLA's frexp mis-scales them)
-    that must never poison the lane with nan — the same class the
-    conformance masks exclude from ULP statistics."""
+def test_div_subnormal_gradual_exact_jnp_modes(mode):
+    """The jnp twins' subnormal contract since the bit-level datapath:
+    quotients *below* the subnormal range still round to signed zero, but
+    subnormal operands are handled exactly under the default gradual
+    policy (PR 2 had to mask them as a degraded frexp class)."""
     cfg = dm.DivisionConfig(mode=mode)
     q = np.asarray(dm.div(
         jnp.asarray([2.0 ** -100, -(2.0 ** -100)], jnp.float32),
         jnp.asarray([2.0 ** 100, 2.0 ** 100], jnp.float32), cfg))
-    assert q[0] == 0 and not np.signbit(q[0]), (mode, q)
-    assert q[1] == 0 and np.signbit(q[1]), (mode, q)
+    assert q[0] == 0 and not np.signbit(q[0]), (mode, q)      # 2^-200 -> +0
+    assert q[1] == 0 and np.signbit(q[1]), (mode, q)          # -> -0
     sub = np.float32(2.0 ** -127)
     q = np.asarray(dm.div(jnp.asarray([sub, 1.0], jnp.float32),
                           jnp.asarray([1.0, sub], jnp.float32), cfg))
-    assert not np.any(np.isnan(q)), (mode, q)
+    np.testing.assert_array_equal(q, [2.0 ** -127, 2.0 ** 127])  # exact now
 
 
 # ------------------------------------------------- property-based straddles

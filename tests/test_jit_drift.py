@@ -1,0 +1,83 @@
+"""Eager-vs-jit numerics drift, pinned instead of footnoted.
+
+ROADMAP has long carried the note that the jnp Goldschmidt twin moves a
+couple of integer ULPs between eager and jit execution (XLA contracts
+``n + n*r`` into an FMA under jit) while the fused kernel matches the
+*jit'd* twin bit-for-bit. This module turns both observations into tier-1
+regressions: silent contraction widening now fails here instead of living
+only as a prose caveat.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import division_modes as dm
+from repro.core import goldschmidt, taylor
+from repro.core.seeds import compute_segments
+from repro.eval import golden, ulp
+
+T24 = compute_segments(2, 24)
+GS_ITERS = goldschmidt.iters_for_terms(2)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    """Deterministic paired corpus incl. ratio straddles, edges, subnormals."""
+    return golden.golden_div_inputs()
+
+
+def test_goldschmidt_divide_eager_vs_jit_within_2_int_ulp(corpus):
+    """FMA contraction may move the joint N/D recurrence, but never by more
+    than 2 integer ULPs — silent widening fails tier-1 here."""
+    a, b = corpus
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    qe = np.asarray(goldschmidt.divide(aj, bj, T24, iters=GS_ITERS))
+    qj = np.asarray(jax.jit(
+        lambda x, y: goldschmidt.divide(x, y, T24, iters=GS_ITERS))(aj, bj))
+    d = ulp.ulp_diff(qe, qj)
+    assert d.max() <= 2, (int(d.max()),
+                          [(float(a[i]), float(b[i]))
+                           for i in np.argsort(d)[-3:]])
+
+
+def test_goldschmidt_recip_eager_vs_jit_within_2_int_ulp():
+    x = golden.golden_inputs()
+    xj = jnp.asarray(x)
+    re = np.asarray(goldschmidt.reciprocal(xj, T24, iters=GS_ITERS))
+    rj = np.asarray(jax.jit(
+        lambda v: goldschmidt.reciprocal(v, T24, iters=GS_ITERS))(xj))
+    assert ulp.ulp_diff(re, rj).max() <= 2
+
+
+def test_taylor_divide_eager_vs_jit_within_2_int_ulp(corpus):
+    """The Dekker residual is FMA-robust by construction; the Taylor twin
+    must not drift more than the Goldschmidt bound either."""
+    a, b = corpus
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    for sched in ("paper", "factored"):
+        qe = np.asarray(taylor.divide(aj, bj, T24, schedule=sched))
+        qj = np.asarray(jax.jit(
+            lambda x, y, s=sched: taylor.divide(x, y, T24, schedule=s))(aj, bj))
+        assert ulp.ulp_diff(qe, qj).max() <= 2, sched
+
+
+@pytest.mark.parametrize("mode,twin", [
+    ("goldschmidt_pallas",
+     lambda x, y: goldschmidt.divide(x, y, T24, iters=GS_ITERS,
+                                     underflow="ftz")),
+    ("taylor_pallas",
+     lambda x, y: taylor.divide(x, y, T24, schedule="factored",
+                                underflow="ftz")),
+])
+def test_fused_kernel_bit_identical_to_jit_twin(corpus, mode, twin):
+    """The fused kernel matches the *jit'd* ftz twin bit-for-bit (the
+    kernel body is traced/compiled, so it sees jit's contraction, not
+    eager's) — any divergence means kernel and twin datapaths forked."""
+    a, b = corpus
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    qk = np.asarray(dm.div(aj, bj, dm.DivisionConfig(mode=mode)))
+    qt = np.asarray(jax.jit(twin)(aj, bj))
+    d = ulp.ulp_diff(qk, qt)
+    assert d.max() == 0, (mode, int(d.max()))

@@ -1,0 +1,156 @@
+"""op=rsqrt conformance gates: the divide-free Givens datapath, first class.
+
+rsqrt is the operation the hardware Givens-rotation unit is built around
+(Hormigo & Muñoz, arXiv:2010.12376) and the ``via="rsqrt"`` formulation of
+our QR workload. This module promotes it to the same footing as recip/div:
+
+  (a) a <= 2 max ULP hard gate vs the f64 oracle over the stratified rsqrt
+      sweep (odd/even exponent split, two-octave mantissa corpus) for
+      taylor (paper + factored, n=2 @ 24-bit) and goldschmidt configs —
+      the compensated final Newton step actually delivers ~0.5 ULP;
+  (b) subnormal operands exact under the gradual policy (the corpus PR 2
+      had to mask), the zero class under ftz;
+  (c) the op=rsqrt column present in the conformance grid;
+  (d) a committed golden store (golden/rsqrt_v1.npz) wired into --check;
+  (e) the IEEE edge contract in every mode.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import division_modes as dm
+from repro.core import taylor
+from repro.eval import conformance, golden, ulp
+
+GATED_CFGS = [
+    ("taylor/paper", dm.DivisionConfig(mode="taylor", schedule="paper",
+                                       n_iters=2, precision_bits=24)),
+    ("taylor/factored", dm.DivisionConfig(mode="taylor", schedule="factored",
+                                          n_iters=2, precision_bits=24)),
+    ("goldschmidt", dm.DivisionConfig(mode="goldschmidt", n_iters=2,
+                                      precision_bits=24)),
+]
+
+
+@pytest.fixture(scope="module")
+def rsqrt_sweep_f32():
+    """Stratified positive sweep, masked to normal operands and results."""
+    strata = ulp.rsqrt_sweep("float32", n_log=4096, n_man=4096)
+    x = np.concatenate([np.asarray(s, np.float32) for s in strata.values()])
+    x64 = x.astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        exact = 1.0 / np.sqrt(x64)
+    keep = ulp.oracle_mask(exact) & ulp.oracle_mask(x64)
+    return x[keep], exact[keep]
+
+
+class TestHardGate:
+    @pytest.mark.parametrize("name,cfg", GATED_CFGS)
+    def test_rsqrt_within_2ulp(self, rsqrt_sweep_f32, name, cfg):
+        """Eq. 17-style gate at the f32 operating point — and the
+        compensated final Newton step is in fact near-correctly-rounded."""
+        x, exact = rsqrt_sweep_f32
+        r = np.asarray(dm.rsqrt(jnp.asarray(x), cfg))
+        errs = ulp.ulp_error(r, exact)
+        assert errs.max() <= 2.0, (name, errs.max())
+        assert errs.max() <= 1.0, (name, errs.max())
+
+    def test_rsqrt_subnormal_operands_exact_gradual(self):
+        """The corpus PR 2 had to mask: subnormal operands now measure
+        <= 2 ULP (in fact sub-ULP) and are always finite under gradual."""
+        x = np.abs(ulp.sweep_subnormals(512, "float32", seed=9)).astype(np.float32)
+        x = np.concatenate([x, [2.0 ** -149, 2.0 ** -127, 1.1754942e-38]]
+                           ).astype(np.float32)
+        exact = 1.0 / np.sqrt(x.astype(np.float64))
+        for name, cfg in GATED_CFGS:
+            r = np.asarray(dm.rsqrt(jnp.asarray(x), cfg))
+            assert np.all(np.isfinite(r)), name
+            errs = ulp.ulp_error(r, exact)
+            assert errs.max() <= 2.0, (name, errs.max())
+            assert errs.max() <= 1.0, (name, errs.max())
+
+    def test_rsqrt_exponent_parity_both_halves(self):
+        """Odd and even exponents run different seed-octave folds; both
+        halves of the parity stratum must meet the gate independently."""
+        x = ulp.sweep_exponent_parity(2048, "float32", seed=3)
+        exact = 1.0 / np.sqrt(x.astype(np.float64))
+        mask = ulp.oracle_mask(exact) & ulp.oracle_mask(x.astype(np.float64))
+        r = np.asarray(dm.rsqrt(jnp.asarray(x), dm.TAYLOR))
+        errs = ulp.ulp_error(r, exact, where=mask)
+        half = len(x) // 2
+        assert errs[:half][mask[:half]].max() <= 1.0   # even exponents
+        assert errs[half:][mask[half:]].max() <= 1.0   # odd exponents
+
+    def test_rsqrt_bf16(self):
+        """The f32 datapath saturates bf16's 8 mantissa bits."""
+        x = np.abs(ulp.sweep_logspace(4096, "bfloat16", seed=2))
+        x64 = x.astype(np.float64)
+        exact = 1.0 / np.sqrt(x64)
+        mask = ulp.oracle_mask(exact, "bfloat16") & ulp.oracle_mask(
+            x64, "bfloat16")
+        r = np.asarray(dm.rsqrt(jnp.asarray(x), dm.TAYLOR).astype(jnp.float32))
+        errs = ulp.ulp_error(r, exact, "bfloat16", where=mask)
+        assert errs.max() <= 1.0, errs.max()
+
+
+def test_rsqrt_ftz_policy_zero_class():
+    """Under ftz, subnormal operands are the zero class: +-sub -> +-inf."""
+    cfg = dm.DivisionConfig(mode="taylor", underflow="ftz")
+    x = jnp.asarray([2.0 ** -127, -(2.0 ** -127), 2.0 ** -149], jnp.float32)
+    r = np.asarray(dm.rsqrt(x, cfg))
+    assert np.isposinf(r[0]) and np.isneginf(r[1]) and np.isposinf(r[2]), r
+
+
+def test_rsqrt_grid_cells_present():
+    """The conformance grid carries the op=rsqrt column for both dtypes."""
+    cells = conformance.default_grid()
+    rs = {(c.mode, c.schedule, c.dtype) for c in cells if c.op == "rsqrt"}
+    for dt in ("float32", "bfloat16"):
+        assert ("exact", "-", dt) in rs
+        assert ("taylor", "paper", dt) in rs
+        assert ("taylor", "factored", dt) in rs
+        assert ("goldschmidt", "-", dt) in rs
+
+
+def test_rsqrt_cell_runner_gradual_vs_ftz_masks():
+    """run_cell measures the subnormal stratum for gradual cells and
+    honors the edge contract either way."""
+    rep = conformance.run_cell(
+        conformance.Cell("taylor", "factored", 2, 24, op="rsqrt"),
+        n_log=256, n_man=256)
+    assert rep["underflow"] == "gradual"
+    assert rep["edge_failures"] == 0
+    assert rep["strata"]["subnormals"]["n"] > 0     # measured, not masked
+    assert rep["overall"]["max_ulp"] <= 2.0
+    assert rep["pass"] is True
+    rep = conformance.run_cell(
+        conformance.Cell("exact", dtype="float32", op="rsqrt"),
+        n_log=256, n_man=256)
+    assert rep["underflow"] == "ftz"
+    assert rep["edge_failures"] == 0
+
+
+def test_rsqrt_golden_vectors_unchanged():
+    """Committed op=rsqrt golden store: drift fails loudly, by cell name."""
+    assert golden.RSQRT_PATH.exists(), (
+        "rsqrt golden store missing — run "
+        "`python -m repro.eval.golden --generate --store rsqrt`")
+    failures = golden.check_rsqrt()
+    assert failures == [], failures
+
+
+def test_rsqrt_oracle_compensated_step(rng):
+    """The f64 oracle benefits from the compensated final step too."""
+    x = rng.uniform(1e-8, 1e8, 20_000)
+    r = taylor.rsqrt_np(x, newton_iters=3)
+    assert np.max(np.abs(r * np.sqrt(x) - 1.0)) < 1e-15
+
+
+@pytest.mark.parametrize("mode", list(dm.MODES))
+def test_rsqrt_edges_every_mode(mode):
+    """±0 -> ±inf, +inf -> +0, negatives and nan -> nan, in every mode."""
+    x64 = np.asarray([0.0, -0.0, np.inf, -np.inf, np.nan, -1.0], np.float64)
+    r = np.asarray(dm.rsqrt(jnp.asarray(x64, jnp.float32),
+                            dm.DivisionConfig(mode=mode)), np.float64)
+    assert conformance._rsqrt_edge_failures(x64, r) == 0, (mode, r)

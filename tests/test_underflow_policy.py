@@ -1,0 +1,201 @@
+"""The underflow-policy switch: ftz vs gradual, and nothing else.
+
+DivisionConfig(underflow=...) selects the jnp twins' subnormal handling:
+"gradual" (default) is exact IEEE gradual underflow through the bit-level
+datapath, "ftz" is the fused kernels' hardware flush contract. The gates:
+
+  (a) the two policies differ *exactly* on the subnormal classes —
+      subnormal operands, results that round into (or flush out of) the
+      subnormal range — and nowhere else;
+  (b) bit-identity on the normal-range lanes of the committed golden
+      stores holds for BOTH policies (the datapath refactor is
+      numerics-preserving outside the subnormal classes);
+  (c) the underflow="ftz" jnp twins are bit-identical to the fused Pallas
+      kernels on the full corpus — subnormal, edge and normal lanes alike
+      (the field-for-field alignment the tentpole promises);
+  (d) under gradual, the jnp twins return finite <= 2 ULP quotients on the
+      subnormal-operand corpus that PR 2 had to mask, and gradual-underflow
+      *results* are correctly rounded into the subnormal lattice.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import division_modes as dm
+from repro.core import goldschmidt, taylor
+from repro.core.seeds import compute_segments
+from repro.eval import golden, ulp
+
+TINY = np.ldexp(1.0, -126)
+JNP_MODES = ["taylor", "goldschmidt"]
+
+
+def _subnormal(x64):
+    return np.isfinite(x64) & (x64 != 0) & (np.abs(x64) < TINY)
+
+
+def _policy_pair(mode, a, b):
+    qg = np.asarray(dm.div(jnp.asarray(a), jnp.asarray(b),
+                           dm.DivisionConfig(mode=mode, underflow="gradual")))
+    qf = np.asarray(dm.div(jnp.asarray(a), jnp.asarray(b),
+                           dm.DivisionConfig(mode=mode, underflow="ftz")))
+    return qg, qf
+
+
+@pytest.mark.parametrize("mode", JNP_MODES)
+def test_policies_differ_only_on_subnormal_classes(mode):
+    """ftz vs gradual: every differing lane is a subnormal class — a
+    subnormal operand, a subnormal gradual result, or a result the flush
+    removed (gradual kept a value <= smallest normal where ftz gives 0)."""
+    a, b = golden.golden_div_inputs()
+    qg, qf = _policy_pair(mode, a, b)
+    differ = ulp.ulp_diff(qg, qf) > 0
+    a64, b64 = a.astype(np.float64), b.astype(np.float64)
+    qg64 = qg.astype(np.float64)
+    flushed = (qf == 0) & (qg != 0) & (np.abs(qg64) <= TINY)
+    sub_class = _subnormal(a64) | _subnormal(b64) | _subnormal(qg64) | flushed
+    outside = differ & ~sub_class
+    assert not outside.any(), [
+        (float(a[i]), float(b[i]), float(qg[i]), float(qf[i]))
+        for i in np.where(outside)[0][:5]]
+    # The switch is not a no-op: the corpus has lanes where they differ.
+    assert differ.any(), "no subnormal-class lanes exercised"
+
+
+@pytest.mark.parametrize("mode", JNP_MODES)
+def test_both_policies_bit_identical_on_normal_golden_lanes(mode):
+    """Normal-range golden bit-identity holds for BOTH policies."""
+    with np.load(golden.DIVIDE_PATH) as z:
+        a, b = z["a"], z["b"]
+        key = f"div/{mode}/n2p24" if mode == "goldschmidt" else \
+            "div/taylor/factored/n2p24"
+        want = z["out:" + key].view(np.float32)
+    qg, qf = _policy_pair(mode, a, b)
+    a64, b64 = a.astype(np.float64), b.astype(np.float64)
+    qg64 = qg.astype(np.float64)
+    flushed = (qf == 0) & (qg != 0) & (np.abs(qg64) <= TINY)
+    normal = ~(_subnormal(a64) | _subnormal(b64) | _subnormal(qg64) | flushed)
+    assert normal.sum() > 1000                      # the corpus is mostly normal
+    assert ulp.ulp_diff(qg, want)[normal].max() == 0, mode
+    assert ulp.ulp_diff(qf, want)[normal].max() == 0, mode
+
+
+@pytest.mark.parametrize("mode,twin", [
+    ("taylor_pallas",
+     lambda a, b: taylor.divide(a, b, compute_segments(2, 24),
+                                schedule="factored", underflow="ftz")),
+    ("goldschmidt_pallas",
+     lambda a, b: goldschmidt.divide(a, b, compute_segments(2, 24),
+                                     iters=goldschmidt.iters_for_terms(2),
+                                     underflow="ftz")),
+])
+def test_ftz_twin_bit_identical_to_fused_divide_kernel(mode, twin):
+    """The field-for-field alignment gate: jit'd underflow="ftz" twin ==
+    fused kernel, bit for bit, on normal + subnormal + IEEE edge lanes."""
+    a, b = golden.golden_div_inputs()
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    qk = np.asarray(dm.div(aj, bj, dm.DivisionConfig(mode=mode)))
+    qt = np.asarray(jax.jit(twin)(aj, bj))
+    d = ulp.ulp_diff(qk, qt)
+    assert d.max() == 0, (mode, int(d.max()),
+                          [(float(a[i]), float(b[i]))
+                           for i in np.where(d > 0)[0][:5]])
+
+
+@pytest.mark.parametrize("mode,twin", [
+    ("taylor_pallas",
+     lambda x: taylor.reciprocal(x, compute_segments(2, 24),
+                                 schedule="factored", underflow="ftz")),
+    ("goldschmidt_pallas",
+     lambda x: goldschmidt.reciprocal(x, compute_segments(2, 24),
+                                      iters=goldschmidt.iters_for_terms(2),
+                                      underflow="ftz")),
+])
+def test_ftz_twin_bit_identical_to_fused_recip_kernel(mode, twin):
+    x = golden.golden_inputs()
+    xj = jnp.asarray(x)
+    rk = np.asarray(dm.recip(xj, dm.DivisionConfig(mode=mode)))
+    rt = np.asarray(jax.jit(twin)(xj))
+    d = ulp.ulp_diff(rk, rt)
+    assert d.max() == 0, (mode, [float(x[i]) for i in np.where(d > 0)[0][:5]])
+
+
+@pytest.mark.parametrize("mode", JNP_MODES)
+def test_gradual_subnormal_operand_corpus_2ulp(mode):
+    """Acceptance gate: the subnormal-operand div corpus measures finite
+    and <= 2 ULP under gradual (PR 2 masked these lanes entirely)."""
+    b = ulp.sweep_subnormals(512, "float32", seed=21)
+    a = ulp.sweep_logspace(512, "float32", seed=22)
+    # Add subnormal numerators and subnormal/subnormal pairs.
+    a2 = ulp.sweep_subnormals(256, "float32", seed=23)
+    b2 = ulp.sweep_logspace(256, "float32", seed=24)
+    a3 = ulp.sweep_subnormals(128, "float32", seed=25)
+    b3 = ulp.sweep_subnormals(128, "float32", seed=26)
+    aa = np.concatenate([a, a2, a3]).astype(np.float32)
+    bb = np.concatenate([b, b2, b3]).astype(np.float32)
+    a64, b64 = aa.astype(np.float64), bb.astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        exact = a64 / b64
+    mask = ((ulp.oracle_mask(exact) | ulp.subnormal_mask(exact))
+            & ulp.overflow_guard(exact))
+    assert mask.sum() > 300
+    cfg = dm.DivisionConfig(mode=mode)          # gradual is the default
+    q = np.asarray(dm.div(jnp.asarray(aa), jnp.asarray(bb), cfg))
+    assert not np.isnan(q[mask]).any(), mode
+    errs = ulp.ulp_error(q, exact, where=mask)
+    assert errs.max() <= 2.0, (mode, errs.max())
+
+
+@pytest.mark.parametrize("mode", JNP_MODES)
+def test_gradual_underflow_results_correctly_rounded(mode):
+    """Quotients of normal operands that land subnormal are RNE-exact
+    against numpy's correctly rounded f64 -> f32 cast for exact ratios,
+    and <= 2 ULP in general."""
+    cfg = dm.DivisionConfig(mode=mode)
+    # Exactly representable ratios: bit-exact after the integer repack.
+    a = np.asarray([1.5 * 2.0 ** -120, 2.0 ** -100, 1.25 * 2.0 ** -119,
+                    -(1.5 * 2.0 ** -120)], np.float32)
+    b = np.asarray([2.0 ** 9, 2.0 ** 48, 2.0 ** 20, 2.0 ** 9], np.float32)
+    q = np.asarray(dm.div(jnp.asarray(a), jnp.asarray(b), cfg))
+    want = (a.astype(np.float64) / b.astype(np.float64)).astype(np.float32)
+    np.testing.assert_array_equal(q.view(np.uint32), want.view(np.uint32))
+    assert _subnormal(want.astype(np.float64)).all()    # really subnormal
+    # General straddling corpus: <= 2 ULP in subnormal-lattice ULPs.
+    aq, bq = ulp.sweep_quotient_edges(1024, "float32", seed=31)
+    a64, b64 = aq.astype(np.float64), bq.astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        exact = a64 / b64
+    mask = ulp.subnormal_mask(exact)
+    assert mask.sum() > 50
+    q = np.asarray(dm.div(jnp.asarray(aq), jnp.asarray(bq), cfg))
+    errs = ulp.ulp_error(q, exact, where=mask)
+    assert errs.max() <= 2.0, (mode, errs.max())
+
+
+def test_gradual_recip_subnormal_results():
+    """recip of near-maxfloat inputs rounds into the subnormal range."""
+    x = np.asarray([3.2e38, -3.2e38, 2.0 ** 127], np.float32)
+    r = np.asarray(dm.recip(jnp.asarray(x), dm.TAYLOR))
+    exact = 1.0 / x.astype(np.float64)
+    assert _subnormal(exact).all()
+    errs = ulp.ulp_error(r, exact, where=np.isfinite(exact))
+    assert errs.max() <= 1.0, errs
+    # and ftz flushes the same lanes to signed zero
+    rf = np.asarray(dm.recip(jnp.asarray(x),
+                             dm.DivisionConfig(mode="taylor", underflow="ftz")))
+    assert np.all(rf == 0) and list(np.signbit(rf)) == [False, True, False]
+
+
+def test_underflow_config_validation():
+    with pytest.raises(ValueError, match="underflow"):
+        dm.DivisionConfig(mode="taylor", underflow="bogus")
+
+
+def test_effective_underflow_reporting():
+    assert dm.effective_underflow(dm.TAYLOR) == "gradual"
+    assert dm.effective_underflow(
+        dm.DivisionConfig(mode="taylor", underflow="ftz")) == "ftz"
+    for mode in ("taylor_pallas", "goldschmidt_pallas", "ilm", "exact"):
+        assert dm.effective_underflow(dm.DivisionConfig(mode=mode)) == "ftz"
