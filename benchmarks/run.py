@@ -28,7 +28,7 @@ QUICK = False
 
 _BENCH_DIV = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_div.json")
-_BENCH_DIV_KEYS = ("workloads", "tiled_divide")
+_BENCH_DIV_KEYS = ("workloads", "tiled_divide", "consumers")
 
 
 def _write_bench_div():
@@ -411,6 +411,88 @@ def bench_tiled_divide():
     _write_bench_div()
 
 
+def bench_consumers():
+    """Normalization consumers through the unit: softmax / rmsnorm /
+    flash-attention x division modes x two shapes.
+
+    Wall-clock per call (jit-compiled, post-warmup) plus the consumer-tier
+    accuracy metrics (row-sum ULP-equivalents and vs-exact-twin integer ULP
+    for the norms, max |dev| vs the exact twin for attention) — merged into
+    BENCH_div.json as the ``consumers`` section. The Pallas rows run
+    interpret-mode off-TPU (meta.pallas_interpret): functional proxies.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.division_modes import (DivisionConfig, EXACT, attention,
+                                           rmsnorm, softmax)
+    from repro.eval import consumers as cons
+
+    norm_shapes = [(256, 512), (64, 2048)]
+    attn_shapes = [(4, 128, 64), (2, 256, 64)]     # (batch*heads, S, hd)
+    if QUICK:
+        norm_shapes, attn_shapes = norm_shapes[:1], attn_shapes[:1]
+    modes = _workload_modes() + [
+        ("taylor_pallas_n2", DivisionConfig(mode="taylor_pallas", n_iters=2)),
+        ("goldschmidt_pallas_n2",
+         DivisionConfig(mode="goldschmidt_pallas", n_iters=2)),
+    ]
+    rows = {"softmax": {}, "rmsnorm": {}, "flash_attention": {}}
+    for shape in norm_shapes:
+        rng = np.random.default_rng(shape[0] * shape[1])
+        x = jnp.asarray(rng.normal(0, 4, shape).astype(np.float32))
+        w = jnp.asarray(cons.rmsnorm_weight(shape[1], seed=7))
+        sm_exact = np.asarray(softmax(x, -1, EXACT))
+        rn_exact = np.asarray(rmsnorm(x, w, EXACT))
+        oracle_sm = cons.softmax_oracle(np.asarray(x, np.float64))
+        oracle_rn = cons.rmsnorm_oracle(np.asarray(x, np.float64),
+                                        np.asarray(w, np.float64))
+        sm_cell, rn_cell = {}, {}
+        for name, cfg in modes:
+            f_sm = jax.jit(lambda v, cfg=cfg: softmax(v, -1, cfg))
+            us, out = _time_us(f_sm, x, ret_out=True)
+            out = np.asarray(out)
+            sm_cell[name] = {
+                "us": us,
+                "row_sum_max_ulp1": float(cons.row_sum_ulp1(out).max()),
+                "vs_exact_max_ulp": cons.vs_exact_int_ulp(out, sm_exact,
+                                                          oracle_sm),
+            }
+            f_rn = jax.jit(lambda v, w, cfg=cfg: rmsnorm(v, w, cfg))
+            us, out = _time_us(f_rn, x, w, ret_out=True)
+            rn_cell[name] = {
+                "us": us,
+                "vs_exact_max_ulp": cons.vs_exact_int_ulp(
+                    np.asarray(out), rn_exact, oracle_rn),
+            }
+            print(f"softmax_{name}_{shape[0]}x{shape[1]},"
+                  f"{sm_cell[name]['us']:.1f},"
+                  f"row_sum={sm_cell[name]['row_sum_max_ulp1']:.2f}ulp;"
+                  f"vs_exact={sm_cell[name]['vs_exact_max_ulp']}ulp")
+            print(f"rmsnorm_{name}_{shape[0]}x{shape[1]},"
+                  f"{rn_cell[name]['us']:.1f},"
+                  f"vs_exact={rn_cell[name]['vs_exact_max_ulp']}ulp")
+        key = f"{shape[0]}x{shape[1]}"
+        rows["softmax"][key] = sm_cell
+        rows["rmsnorm"][key] = rn_cell
+    for bh, s, hd in attn_shapes:
+        rng = np.random.default_rng(bh * s)
+        q = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+        exact = np.asarray(attention(q, k, v, EXACT))
+        cell = {}
+        for name, cfg in modes:
+            f = jax.jit(lambda q, k, v, cfg=cfg: attention(q, k, v, cfg))
+            us, out = _time_us(f, q, k, v, reps=3, warmup=1, ret_out=True)
+            dev = float(np.max(np.abs(np.asarray(out) - exact)))
+            cell[name] = {"us": us, "max_dev_vs_exact": dev}
+            print(f"attention_{name}_{bh}x{s}x{hd},{us:.1f},"
+                  f"max_dev={dev:.2e}")
+        rows["flash_attention"][f"{bh}x{s}x{hd}"] = cell
+    RESULTS["consumers"] = rows
+    _write_bench_div()
+
+
 BENCHES = {
     "segments_table": bench_segments_table,
     "taylor_iters": bench_taylor_iters,
@@ -422,6 +504,7 @@ BENCHES = {
     "e2e_softdiv": bench_e2e_softdiv,
     "workloads": bench_workloads,
     "tiled_divide": bench_tiled_divide,
+    "consumers": bench_consumers,
 }
 
 

@@ -20,6 +20,15 @@ one config knob:
   * ``goldschmidt_pallas`` — the same refinement fused into the Pallas
                         division kernel (schedule="goldschmidt" in kernels/).
 
+Besides the scalar ops (:func:`recip`, :func:`div`, :func:`rsqrt`), the
+normalization *consumers* are first-class dispatch citizens: :func:`softmax`,
+:func:`rmsnorm`, and :func:`attention` route every mode through one config
+knob — the Pallas modes to the fused kernels (``kernels/ops.py``, with
+schedule="goldschmidt" threaded for mode="goldschmidt_pallas"), the jnp
+modes to twins whose divisions/rsqrts call back into this module. Their
+delivered accuracy is gated by the consumer-conformance tier
+(``repro.eval.consumers`` + the softmax/rmsnorm cells of the grid).
+
 The delivered accuracy of every mode is measured in ULPs by
 ``repro.eval.conformance`` (``python -m repro.eval.conformance``).
 """
@@ -34,8 +43,8 @@ from . import goldschmidt, taylor
 from .fpparts import UNDERFLOW_POLICIES
 from .seeds import compute_segments, rsqrt_seed_table
 
-__all__ = ["DivisionConfig", "recip", "div", "rsqrt", "softmax", "EXACT",
-           "TAYLOR", "effective_underflow"]
+__all__ = ["DivisionConfig", "recip", "div", "rsqrt", "softmax", "rmsnorm",
+           "attention", "EXACT", "TAYLOR", "effective_underflow"]
 
 MODES = ("exact", "taylor", "taylor_pallas", "goldschmidt",
          "goldschmidt_pallas", "ilm")
@@ -174,16 +183,53 @@ def div(a, b, cfg: DivisionConfig = TAYLOR):
 
 
 def rsqrt(x, cfg: DivisionConfig = TAYLOR):
+    """1/sqrt(x) through the mode the config names — no silent fallthrough.
+
+    exact -> XLA ``lax.rsqrt``; taylor/goldschmidt -> the shared jnp
+    PWL-seed + Newton datapath (rsqrt's accuracy dial is ``rsqrt_newton``,
+    not the series depth, so the two jnp algorithm families deliberately
+    share one body — see ROADMAP); taylor_pallas/goldschmidt_pallas -> the
+    fused full-edge rsqrt kernel (``kernels.ops.tsdiv_rsqrt``, FTZ) with
+    the jnp twin as the documented fallback for non-launchable operands
+    (empty arrays, unsupported dtypes); ilm -> Newton iterations with every
+    multiply through the 16-bit ILM (tests/benchmarks only, ~12-bit).
+    """
     import jax
 
     if cfg.mode == "exact":
         return jax.lax.rsqrt(x)
+    if cfg.mode in ("taylor_pallas", "goldschmidt_pallas"):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        if kops.pallas_applicable(jnp.asarray(x)):
+            return kops.tsdiv_rsqrt(jnp.asarray(x),
+                                    newton_iters=cfg.rsqrt_newton,
+                                    n_segments=cfg.rsqrt_segments)
+    if cfg.mode == "ilm":
+        return _rsqrt_ilm_jnp(x, cfg)
     return taylor.rsqrt(x, cfg.rtable, newton_iters=cfg.rsqrt_newton,
                         underflow=effective_underflow(cfg))
 
 
 def softmax(x, axis: int = -1, cfg: DivisionConfig = TAYLOR, where=None):
-    """Numerically-stable softmax whose 1/sum goes through the division unit."""
+    """Numerically-stable softmax whose 1/sum goes through the division unit.
+
+    Mode-faithful dispatch: the Pallas modes route to the fused softmax
+    kernel (``kernels.ops.softmax`` — max/exp/sum/scale in one VMEM pass,
+    schedule="goldschmidt" for mode="goldschmidt_pallas") whenever the
+    operand is kernel-launchable, with the jnp twin below as the documented
+    fallback for non-launchable operands (empty arrays, dtypes the kernels
+    don't take). The fallback twin still routes its 1/sum through
+    :func:`recip` under the same config — its f32 intermediates are
+    launchable, so a Pallas config reaches the fused *scalar* unit even
+    when the fused *consumer* kernel cannot run; both paths deliver the
+    Pallas modes' FTZ policy (see :func:`effective_underflow`).
+    Fully-masked rows (``where`` all-False, or every logit -inf) return
+    zeros in every mode — never 0 * recip(0) = nan (nor 0/0 in exact
+    mode).
+    """
     import jax
     import jax.numpy as jnp
 
@@ -194,31 +240,132 @@ def softmax(x, axis: int = -1, cfg: DivisionConfig = TAYLOR, where=None):
         return jnp.ones_like(x)
     if x.shape[axis] == 0:
         return x                     # no logits: empty in, empty out
-    xmax = jnp.max(x, axis=axis, keepdims=True, where=where,
+    if cfg.mode in ("taylor_pallas", "goldschmidt_pallas"):
+        from repro.kernels import ops as kops
+
+        if kops.pallas_applicable(x):
+            ax = axis % x.ndim
+            xm = x if where is None else jnp.where(where, x, -jnp.inf)
+            if ax != x.ndim - 1:
+                xm = jnp.moveaxis(xm, ax, -1)
+            sched = (cfg.schedule if cfg.mode == "taylor_pallas"
+                     else "goldschmidt")
+            out = kops.softmax(xm, n_iters=cfg.n_iters,
+                               precision_bits=cfg.precision_bits,
+                               schedule=sched)
+            if ax != x.ndim - 1:
+                out = jnp.moveaxis(out, -1, ax)
+            return out
+    # f32 compute with the input dtype back out, like every datapath in
+    # core/ (and like the fused kernel): a bf16 exp would round the shifted
+    # logit to 8 bits and amplify by |arg| — tens of output ULPs on
+    # wide-dynamic-range rows.
+    xf = x.astype(jnp.float32)
+    xmax = jnp.max(xf, axis=axis, keepdims=True, where=where,
                    initial=-jnp.inf if where is not None else None)
     xmax = jnp.where(jnp.isfinite(xmax), xmax, 0.0)
-    ex = jnp.exp(x - jax.lax.stop_gradient(xmax))
+    ex = jnp.exp(xf - jax.lax.stop_gradient(xmax))
     if where is not None:
         ex = jnp.where(where, ex, 0.0)
     s = jnp.sum(ex, axis=axis, keepdims=True)
-    return ex / s if cfg.mode == "exact" else ex * recip(s, cfg)
+    # Fully-masked rows have ex == 0 lane-wise, so a divisor of 1 yields the
+    # zero row exactly; rows with any surviving logit have s >= 1.
+    safe = jnp.where(s == 0, jnp.ones_like(s), s)
+    out = ex / safe if cfg.mode == "exact" else ex * recip(safe, cfg)
+    return out.astype(x.dtype)
 
 
-def _recip_ilm_jnp(x, cfg: DivisionConfig):
-    """Reciprocal with every multiply routed through the 16-bit jnp ILM.
+def rmsnorm(x, w, cfg: DivisionConfig = TAYLOR, *, eps: float = 1e-6):
+    """RMSNorm over the last dim; the 1/sqrt runs the configured mode.
 
-    Mantissas are quantized to 12 bits so ILM products fit uint32 lanes; the
-    result carries ~12-bit precision — the "programmable accuracy" end of the
-    paper's dial. Tests/benchmarks only.
+    The Pallas modes dispatch to the fused kernel (``kernels.ops.rmsnorm``:
+    mean-of-squares -> PWL-seeded Newton rsqrt -> scale in one VMEM pass);
+    every other mode runs the jnp twin with the rsqrt routed through
+    :func:`rsqrt` — so exact/taylor/goldschmidt/ilm all answer to the same
+    config knob. When a Pallas config's operand is not kernel-launchable
+    (empty, unsupported dtype), the twin's f32 mean-of-squares still
+    reaches the fused rsqrt kernel through :func:`rsqrt` — the scalar unit
+    stays fused even when the consumer kernel cannot run. f32 compute,
+    input dtype back out.
+    """
+    import jax.numpy as jnp
+
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    if x.ndim == 0 or x.shape[-1] == 0:
+        return x
+    if cfg.mode in ("taylor_pallas", "goldschmidt_pallas"):
+        from repro.kernels import ops as kops
+
+        if kops.pallas_applicable(x):
+            return kops.rmsnorm(x, w, eps=eps,
+                                newton_iters=cfg.rsqrt_newton,
+                                n_segments=cfg.rsqrt_segments)
+    xf = x.astype(jnp.float32)
+    ss = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    if cfg.mode == "exact":
+        import jax
+
+        r = jax.lax.rsqrt(ss + jnp.float32(eps))
+    else:
+        r = rsqrt(ss + jnp.float32(eps), cfg)
+    return (xf * r * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention(q, k, v, cfg: DivisionConfig = TAYLOR, *, causal: bool = True):
+    """Scaled dot-product attention with the softmax 1/l through the unit.
+
+    q/k/v: (..., S, hd). The Pallas modes dispatch to the fused
+    flash-attention kernel (online softmax, Dao et al., with the final 1/l
+    normalization in the paper's division unit; schedule="goldschmidt" for
+    mode="goldschmidt_pallas"); every other mode runs the jnp twin whose
+    row softmax is :func:`softmax` under the same config — one knob for
+    every algorithm family (for a Pallas config whose q/k/v are not
+    kernel-launchable, the twin's f32 score softmax re-dispatches and
+    reaches the fused softmax kernel). Ragged sequence lengths are handled
+    by the kernel wrapper (pad-and-mask).
+    """
+    import jax.numpy as jnp
+
+    q, k, v = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+    if cfg.mode in ("taylor_pallas", "goldschmidt_pallas"):
+        from repro.kernels import ops as kops
+
+        if (kops.pallas_applicable(q) and kops.pallas_applicable(k)
+                and kops.pallas_applicable(v)):
+            sched = (cfg.schedule if cfg.mode == "taylor_pallas"
+                     else "goldschmidt")
+            return kops.flash_attention(q, k, v, causal=causal,
+                                        n_iters=cfg.n_iters,
+                                        precision_bits=cfg.precision_bits,
+                                        schedule=sched)
+    # One causal-mask sentinel for the twin and the fused kernel: parity
+    # between the two is a gated metric, so the constant must not fork.
+    from repro.kernels.flash_attention import NEG_INF
+
+    hd = q.shape[-1]
+    s = jnp.einsum("...qh,...kh->...qk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * jnp.float32(1.0 / np.sqrt(hd))
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, jnp.float32(NEG_INF))
+    p = softmax(s, -1, cfg)
+    return jnp.einsum("...qk,...kh->...qh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _ilm_fpmul(mant_bits: int = 12, iters: int = 12):
+    """Float multiply with the mantissa product through the 16-bit jnp ILM.
+
+    Mantissas are quantized to ``mant_bits`` so ILM products fit uint32
+    lanes; the result carries ~12-bit precision — the "programmable
+    accuracy" end of the paper's dial. Shared by the ILM reciprocal and
+    rsqrt emulations (tests/benchmarks only).
     """
     import jax.numpy as jnp
 
     from . import ilm as ilm_mod
-    from . import powering
-
-    mant_bits = 12
-    iters = 12
-    table = compute_segments(min(cfg.n_iters, 5), min(cfg.precision_bits, 12))
 
     def fpmul(a, b):
         fa, ea = jnp.frexp(jnp.abs(a))
@@ -229,6 +376,18 @@ def _recip_ilm_jnp(x, cfg: DivisionConfig):
         p = ilm_mod.ilm_mul(ma, mb, iters).astype(jnp.float32)
         r = jnp.ldexp(p / (4.0 * scale * scale), (ea - 1) + (eb - 1) + 2)
         return r * jnp.sign(a) * jnp.sign(b)
+
+    return fpmul
+
+
+def _recip_ilm_jnp(x, cfg: DivisionConfig):
+    """Reciprocal with every multiply routed through the 16-bit jnp ILM."""
+    import jax.numpy as jnp
+
+    from . import powering
+
+    table = compute_segments(min(cfg.n_iters, 5), min(cfg.precision_bits, 12))
+    fpmul = _ilm_fpmul()
 
     xf = x.astype(jnp.float32)
     frac, e = jnp.frexp(jnp.abs(xf))
@@ -252,3 +411,45 @@ def _recip_ilm_jnp(x, cfg: DivisionConfig):
     r = jnp.where(jnp.isnan(xf), jnp.float32(np.nan), r)
     r = taylor.attach_grad(r, [(xf, -r * r)])
     return r.astype(x.dtype)
+
+
+def _rsqrt_ilm_jnp(x, cfg: DivisionConfig):
+    """rsqrt with every Newton multiply through the 16-bit jnp ILM.
+
+    PWL chord seed on the parity-folded mantissa (same ROM as the jnp
+    twins, via ``cfg.rtable``), then ``cfg.rsqrt_newton`` Newton steps whose
+    y*y, u*y^2 and correction products all run the ILM — the ~12-bit end of
+    the dial, the explicit implementation the dispatch used to silently
+    replace with the Taylor datapath. FTZ semantics (subnormal operands are
+    the zero class, like every ILM/kernel path), IEEE edges as elsewhere:
+    ±0 -> ±inf, +inf -> +0, x < 0 and nan -> nan. Gradients via the shared
+    custom_jvp rule (fpparts.jnp_rsqrt). Tests/benchmarks only.
+    """
+    import jax.numpy as jnp
+
+    from . import fpparts
+
+    table = cfg.rtable
+    fpmul = _ilm_fpmul()
+
+    def impl(xp, xf):
+        ax = xp.abs(xf)
+        frac, e = xp.frexp(ax)          # ax = frac * 2^e, frac in [0.5, 1)
+        s = e >> 1
+        u = xp.ldexp(frac, e - 2 * s)   # in [0.5, 2)
+        inner = xp.asarray(table.inner_boundaries, xp.float32)
+        idx = xp.sum((u[..., None] >= inner).astype(jnp.int32), axis=-1)
+        y = (xp.take(xp.asarray(table.slopes, xp.float32), idx) * u
+             + xp.take(xp.asarray(table.intercepts, xp.float32), idx))
+        for _ in range(cfg.rsqrt_newton):    # honor the dial exactly, like
+            t = fpmul(u, fpmul(y, y))        # every other rsqrt datapath
+            y = fpmul(y, 1.5 - 0.5 * t)
+        r = xp.ldexp(y, -s)
+        # FTZ zero class (zeros and subnormal magnitudes) -> signed inf.
+        tiny = jnp.float32(2.0 ** -126)
+        r = xp.where(ax < tiny, xp.copysign(jnp.float32(np.inf), xf), r)
+        r = xp.where(xp.isinf(xf) & (xf > 0), jnp.float32(0.0), r)
+        neg = (xf < 0) & ~(ax < tiny)
+        return xp.where(neg | xp.isnan(xf), jnp.float32(np.nan), r)
+
+    return fpparts.jnp_rsqrt(x, impl)

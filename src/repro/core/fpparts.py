@@ -52,7 +52,7 @@ import numpy as np
 __all__ = [
     "two_product", "sign_product", "decompose_div", "ldexp2", "recombine_div",
     "div_edges", "refine_quotient", "recombine_recip", "jnp_divide",
-    "jnp_reciprocal", "split_f32", "repack_f32", "bit_divide",
+    "jnp_reciprocal", "jnp_rsqrt", "split_f32", "repack_f32", "bit_divide",
     "bit_reciprocal", "UNDERFLOW_POLICIES",
     "F32_SIGN", "F32_MAG_MASK", "F32_EXP_MASK", "F32_MAN_MASK",
     "F32_ONE_BITS", "F32_IMPLICIT",
@@ -218,6 +218,41 @@ def jnp_reciprocal(x, impl):
         return r, -(rf * rf) * dx
 
     return _recip(xf).astype(out_dtype)
+
+
+def jnp_rsqrt(x, impl):
+    """Shared jnp wrapper for the bit-level rsqrt datapaths.
+
+    ``impl(jnp, xf) -> r`` is the f32 body. Same custom_jvp rationale as
+    :func:`jnp_reciprocal` (the arithmetic straight-through of
+    ``taylor.attach_grad`` would flush gradual-underflow *primals* on this
+    FTZ/DAZ backend — a custom derivative rule leaves the primal bits
+    untouched): d(x^-1/2) = -r^3/2 dx. The analytic coefficient itself can
+    overflow f32 even where r is finite (r ~ 2^64 for subnormal operands
+    gives r^3 ~ 2^192), so non-finite *gradient* lanes are masked to zero
+    — the gradient lane degrades, the primal never does.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.asarray(x)
+    out_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+
+    @jax.custom_jvp
+    def _rsqrt(xf):
+        return impl(jnp, xf)
+
+    @_rsqrt.defjvp
+    def _rsqrt_jvp(primals, tangents):
+        (xf,), (dx,) = primals, tangents
+        r = impl(jnp, xf)
+        rf = jnp.where(jnp.isfinite(r), r, 0.0)
+        g = jnp.float32(-0.5) * rf * rf * rf
+        g = jnp.where(jnp.isfinite(g), g, 0.0)
+        return r, g * dx
+
+    return _rsqrt(xf).astype(out_dtype)
 
 
 # ----------------------------------------------------- bit-level f32 datapath

@@ -343,14 +343,13 @@ def _rsqrt_bits(x, table: SeedTable, newton_iters: int, underflow: str):
 
 def rsqrt(x, table: SeedTable | None = None, *, newton_iters: int = 2,
           underflow: str = "gradual"):
-    import jax.numpy as jnp
+    """Taylor/Newton rsqrt in JAX. f32 compute; bf16/f16 pass through f32.
 
+    Gradients come from a ``custom_jvp`` rule (fpparts.jnp_rsqrt — forward
+    and reverse mode), not ``attach_grad``: the straight-through arithmetic
+    would flush gradual-underflow *primals* on this FTZ/DAZ backend, and a
+    custom derivative rule leaves the primal bits untouched.
+    """
     table = table or rsqrt_seed_table()
-    x = jnp.asarray(x)
-    out_dtype = x.dtype
-    xf = x.astype(jnp.float32) if x.dtype != jnp.float32 else x
-    r = _rsqrt_impl(jnp, xf, table, newton_iters, underflow)
-    # attach_grad is safe here (unlike divide/recip): rsqrt primals are
-    # always normal-range, so the straight-through arithmetic cannot flush.
-    r = attach_grad(r, [(xf, -0.5 * r * r * r)])    # d(x^-1/2) = -r^3/2 dx
-    return r.astype(out_dtype)
+    return fpparts.jnp_rsqrt(
+        x, lambda xp, xf: _rsqrt_impl(xp, xf, table, newton_iters, underflow))

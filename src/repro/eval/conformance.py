@@ -10,7 +10,9 @@ stratified operand corpus (eval/ulp.py) and emits a machine-readable report:
 The five algorithm families on identical footing: exact (XLA), Taylor with
 the paper's §6 schedule, Taylor factored, Goldschmidt (core/goldschmidt.py,
 plus its fused-kernel twin), and the 16-bit ILM emulation; op in
-{recip, div, rsqrt}. Masking is underflow-policy-aware: gradual cells (the
+{recip, div, rsqrt} plus the consumer tier {softmax, rmsnorm} (row
+corpora and unit-isolating gates in eval/consumers.py). Masking is
+underflow-policy-aware: gradual cells (the
 bit-level jnp twins) measure subnormal operands and results, FTZ cells
 exclude them as the flush edge class. The process exits non-zero if any
 cell fails its gate (edge contract, or > 2 max ULP at the n >= 2 non-ILM
@@ -30,9 +32,9 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.division_modes import (DivisionConfig, div, recip, rsqrt,
-                                       effective_underflow)
+                                       softmax, rmsnorm, effective_underflow)
 from repro.core.seeds import compute_segments
-from . import ulp
+from . import consumers, ulp
 
 __all__ = ["Cell", "default_grid", "run_cell", "run_conformance",
            "format_table", "cell_gate", "main"]
@@ -74,9 +76,14 @@ def default_grid(dtypes: Sequence[str] = ulp.DTYPES,
     """Every (op x mode x schedule x n_iters x dtype) cell of the grid.
 
     op=rsqrt runs at the f32 operating point only (rsqrt's accuracy dial is
-    ``rsqrt_newton``, not the series depth, and the Pallas modes share the
-    jnp rsqrt datapath — so exact/taylor/goldschmidt are the distinct
-    columns).
+    ``rsqrt_newton``, not the series depth; taylor and goldschmidt share the
+    jnp rsqrt datapath by design, and both Pallas modes share the fused
+    full-edge rsqrt kernel — it has no schedule knob — so the
+    goldschmidt_pallas rsqrt column is collapsed into the taylor_pallas
+    cell rather than re-measuring an identical datapath). The consumer ops
+    (softmax, rmsnorm) run at the (2, 24) operating point across every
+    mode: their dial is gated by the vs-exact-twin and row-sum metrics, not
+    the oracle ULP (see eval/consumers.py).
     """
     if quick:
         dial = [d for d in dial if d == (2, 24)] or [dial[0]]
@@ -95,7 +102,17 @@ def default_grid(dtypes: Sequence[str] = ulp.DTYPES,
         cells.append(Cell("exact", dtype=dt, op="rsqrt"))
         for sched in ("paper", "factored"):
             cells.append(Cell("taylor", sched, 2, 24, dt, op="rsqrt"))
+        cells.append(Cell("taylor_pallas", "factored", 2, 24, dt, op="rsqrt"))
         cells.append(Cell("goldschmidt", "-", 2, 24, dt, op="rsqrt"))
+        cells.append(Cell("ilm", "-", 2, 24, dt, op="rsqrt"))
+        for op in consumers.CONSUMER_OPS:
+            cells.append(Cell("exact", dtype=dt, op=op))
+            for sched in ("paper", "factored"):
+                cells.append(Cell("taylor", sched, 2, 24, dt, op=op))
+            cells.append(Cell("taylor_pallas", "factored", 2, 24, dt, op=op))
+            cells.append(Cell("goldschmidt", "-", 2, 24, dt, op=op))
+            cells.append(Cell("goldschmidt_pallas", "-", 2, 24, dt, op=op))
+            cells.append(Cell("ilm", "-", 2, 24, dt, op=op))
     return cells
 
 
@@ -175,6 +192,43 @@ def _rsqrt_edge_failures(x64: np.ndarray, r64: np.ndarray) -> int:
     return fails
 
 
+def _softmax_edge_failures(cfg: DivisionConfig, dtype: str) -> int:
+    """Masked-softmax contract on the edge rows (eval/consumers.py):
+
+    fully-masked row -> exact zeros (never 0 * recip(0) = nan), single-
+    survivor row -> probability 1 within 2 ULP-equivalents (ILM: its
+    ~12-bit dial) with exact zeros elsewhere, nan row -> nan everywhere.
+    """
+    import jax.numpy as jnp
+
+    p, _, _ = ulp._fmt(dtype)
+    rows = consumers.softmax_edge_rows(dtype)
+    out = np.asarray(softmax(jnp.asarray(rows), -1, cfg)).astype(np.float64)
+    tol = 2.0 ** -10 if cfg.mode == "ilm" else 2.0 * 2.0 ** (1 - p)
+    fails = int(np.sum(out[0] != 0.0))
+    fails += int(not abs(out[1, 0] - 1.0) <= tol)
+    fails += int(np.sum(out[1, 1:] != 0.0))
+    fails += int(np.sum(~np.isnan(out[2])))
+    return fails
+
+
+def _rmsnorm_edge_failures(cfg: DivisionConfig, dtype: str) -> int:
+    """RMSNorm edge contract: an all-zero row normalizes to exact zeros
+    (0 * rsqrt(eps) * w) and a nan row propagates nan, in every mode."""
+    import jax.numpy as jnp
+
+    dt = ulp._resolve_dtype(dtype)
+    d = 16
+    rows = np.zeros((2, d)).astype(dt)
+    rows[1, :] = 1.0
+    rows[1, d // 2] = np.nan
+    w = jnp.asarray(consumers.rmsnorm_weight(d))
+    out = np.asarray(rmsnorm(jnp.asarray(rows), w, cfg)).astype(np.float64)
+    fails = int(np.sum(out[0] != 0.0))
+    fails += int(np.sum(~np.isnan(out[1])))
+    return fails
+
+
 def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
              seed: int = 0) -> Dict:
     """Measure one cell over the stratified sweep; returns a report dict.
@@ -194,6 +248,7 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
     per_stratum: Dict[str, Dict] = {}
     edge_fail = 0
     agg: List[np.ndarray] = []
+    extra: Dict = {}       # op-specific gated metrics (consumer cells)
 
     def measure(name: str, r_np: np.ndarray, exact: np.ndarray,
                 mask: np.ndarray) -> None:
@@ -264,6 +319,51 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
             if name == "edges":
                 edge_fail = _rsqrt_edge_failures(x64,
                                                  r_np.astype(np.float64))
+    elif cell.op in consumers.CONSUMER_OPS:
+        # Consumer cells: oracle ULP stats are informational (the shared
+        # exp/reduction error dominates on hard strata, in every mode);
+        # the gated numbers are the vs-exact-twin integer ULP and, for
+        # softmax, the row-sum accuracy. See eval/consumers.py.
+        exact_cfg = DivisionConfig(mode="exact")
+        rows = max(8, min(n_log, 4096) // 64)
+        d = 128
+        row_sum_max = 0.0
+        vs_exact_max = 0
+        if cell.op == "softmax":
+            strata_rows = consumers.softmax_rows(cell.dtype, rows, d, seed)
+        else:
+            strata_rows = consumers.rmsnorm_rows(cell.dtype, rows, d, seed)
+            w = consumers.rmsnorm_weight(d, seed)
+            wj = jnp.asarray(w)
+        for name, xs in strata_rows.items():
+            xj = jnp.asarray(xs)
+            x64 = np.asarray(xs).astype(np.float64)
+            if cell.op == "softmax":
+                out = np.asarray(softmax(xj, -1, cfg))
+                twin = np.asarray(softmax(xj, -1, exact_cfg))
+                exact = consumers.softmax_oracle(x64)
+                mask = ulp.oracle_mask(exact, cell.dtype)
+            else:
+                out = np.asarray(rmsnorm(xj, wj, cfg))
+                twin = np.asarray(rmsnorm(xj, wj, exact_cfg))
+                exact = consumers.rmsnorm_oracle(x64, w.astype(np.float64))
+                mask = (ulp.oracle_mask(exact, cell.dtype)
+                        & ~ulp.subnormal_mask(x64, cell.dtype))
+            measure(name, out, exact, mask)
+            ve = consumers.vs_exact_int_ulp(out, twin, exact, cell.dtype)
+            per_stratum[name]["vs_exact_max_ulp"] = ve
+            vs_exact_max = max(vs_exact_max, ve)
+            if cell.op == "softmax":
+                rs = float(consumers.row_sum_ulp1(out, cell.dtype).max())
+                per_stratum[name]["row_sum_max_ulp1"] = rs
+                row_sum_max = max(row_sum_max, rs)
+        if cell.op == "softmax":
+            edge_fail = _softmax_edge_failures(cfg, cell.dtype)
+        else:
+            edge_fail = _rmsnorm_edge_failures(cfg, cell.dtype)
+        extra = {"vs_exact_max_ulp": vs_exact_max}
+        if cell.op == "softmax":
+            extra["row_sum_max_ulp1"] = row_sum_max
     else:
         strata = ulp.stratified_sweep(cell.dtype, n_log=n_log, n_man=n_man,
                                       boundaries=table.boundaries, seed=seed)
@@ -290,6 +390,7 @@ def run_cell(cell: Cell, n_log: int = 4096, n_man: int = 4096,
         "edge_failures": edge_fail,
         "seconds": round(time.perf_counter() - t0, 3),
     })
+    out.update(extra)
     out["pass"] = cell_gate(out)
     return out
 
@@ -325,9 +426,24 @@ def cell_gate(cell_report: Dict) -> bool:
     additionally deliver the paper's eq. 17 gate (<= 2 max ULP). The
     n=1 @ 12-bit dial point is the deliberately-loose end of the accuracy
     dial and is not ULP-gated.
+
+    Consumer cells (op in {softmax, rmsnorm}) swap the oracle-ULP gate for
+    the metrics that isolate the unit's contribution (eval/consumers.py):
+    vs-exact-twin integer ULP and, for softmax, row-sum accuracy — the
+    shared exp/reduction error dominates oracle ULPs on hard strata in
+    every mode including exact, so gating on it would measure the
+    consumer, not the divider.
     """
     o = cell_report["overall"]
     ok = cell_report["edge_failures"] == 0 and np.isfinite(o["max_ulp"])
+    if cell_report.get("op") in consumers.CONSUMER_OPS:
+        if cell_report["mode"] != "ilm" and cell_report["n_iters"] >= 2:
+            ok = ok and (cell_report["vs_exact_max_ulp"]
+                         <= consumers.VS_EXACT_GATE_ULP)
+            if cell_report["op"] == "softmax":
+                ok = ok and (cell_report["row_sum_max_ulp1"]
+                             <= consumers.ROW_SUM_GATE_ULP)
+        return bool(ok)
     if cell_report["mode"] != "ilm" and cell_report["n_iters"] >= 2:
         ok = ok and o["max_ulp"] <= GATE_MAX_ULP
     return bool(ok)

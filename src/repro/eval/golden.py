@@ -6,9 +6,9 @@ division-mode cells; the resulting f32 *bit patterns* are committed as an
 ULPs (default tolerance 0 — any numerics change must be deliberate and
 regenerate the vectors):
 
-    PYTHONPATH=src python -m repro.eval.golden --check   # recip+divide+rsqrt
+    PYTHONPATH=src python -m repro.eval.golden --check   # recip+divide+rsqrt+softmax
     PYTHONPATH=src python -m repro.eval.golden --generate   # after a deliberate change
-    PYTHONPATH=src python -m repro.eval.golden --check --store rsqrt
+    PYTHONPATH=src python -m repro.eval.golden --check --store softmax
 
 tests/test_conformance.py runs the check in tier-1, so an accidental change
 to seeds, schedules, the compensated residual, or the kernels shows up as a
@@ -26,15 +26,17 @@ import numpy as np
 
 from . import ulp
 
-__all__ = ["GOLDEN_PATH", "DIVIDE_PATH", "RSQRT_PATH", "golden_cells",
-           "golden_inputs", "golden_div_cells", "golden_div_inputs",
-           "golden_rsqrt_cells", "golden_rsqrt_inputs", "generate",
-           "generate_divide", "generate_rsqrt", "check", "check_divide",
-           "check_rsqrt"]
+__all__ = ["GOLDEN_PATH", "DIVIDE_PATH", "RSQRT_PATH", "SOFTMAX_PATH",
+           "golden_cells", "golden_inputs", "golden_div_cells",
+           "golden_div_inputs", "golden_rsqrt_cells", "golden_rsqrt_inputs",
+           "golden_softmax_cells", "golden_softmax_inputs", "generate",
+           "generate_divide", "generate_rsqrt", "generate_softmax", "check",
+           "check_divide", "check_rsqrt", "check_softmax"]
 
 GOLDEN_PATH = Path(__file__).parent / "golden" / "reciprocal_v1.npz"
 DIVIDE_PATH = Path(__file__).parent / "golden" / "divide_v1.npz"
 RSQRT_PATH = Path(__file__).parent / "golden" / "rsqrt_v1.npz"
+SOFTMAX_PATH = Path(__file__).parent / "golden" / "softmax_v1.npz"
 
 
 def golden_cells() -> List[Tuple[str, Dict]]:
@@ -142,10 +144,44 @@ def golden_rsqrt_inputs() -> np.ndarray:
     return np.concatenate(parts).astype(np.float32)
 
 
+def golden_softmax_cells() -> List[Tuple[str, Dict]]:
+    """op=softmax cells: every approximate datapath the dispatch can route
+    (jnp twins, both fused-kernel schedules, the ILM emulation)."""
+    return [
+        ("softmax/taylor/paper/n2p24",
+         dict(mode="taylor", schedule="paper", n_iters=2, precision_bits=24)),
+        ("softmax/taylor/factored/n2p24",
+         dict(mode="taylor", schedule="factored", n_iters=2,
+              precision_bits=24)),
+        ("softmax/taylor_pallas/factored/n2p24",
+         dict(mode="taylor_pallas", schedule="factored", n_iters=2,
+              precision_bits=24)),
+        ("softmax/goldschmidt/n2p24",
+         dict(mode="goldschmidt", n_iters=2, precision_bits=24)),
+        ("softmax/goldschmidt_pallas/n2p24",
+         dict(mode="goldschmidt_pallas", n_iters=2, precision_bits=24)),
+        ("softmax/ilm/n2p24", dict(mode="ilm", n_iters=2, precision_bits=24)),
+    ]
+
+
+def golden_softmax_inputs() -> np.ndarray:
+    """Deterministic f32 logit-row corpus (R, 64): the consumer strata
+    (gaussian / wide-dynamic-range / denormal-logit / peaked / tied rows,
+    eval/consumers.py) plus the edge rows (fully-masked, single-survivor,
+    nan-propagation)."""
+    from . import consumers
+
+    strata = consumers.softmax_rows("float32", n_rows=24, d=64, seed=401)
+    parts = [strata[k] for k in sorted(strata)]
+    parts.append(consumers.softmax_edge_rows("float32", d=64))
+    return np.concatenate(parts).astype(np.float32)
+
+
 def _compute(key: str, kw: Dict, x: np.ndarray, a: np.ndarray) -> np.ndarray:
     import jax.numpy as jnp
 
-    from repro.core.division_modes import DivisionConfig, div, recip, rsqrt
+    from repro.core.division_modes import (DivisionConfig, div, recip, rsqrt,
+                                           softmax)
 
     cfg = DivisionConfig(**kw)
     xj = jnp.asarray(x)
@@ -153,6 +189,8 @@ def _compute(key: str, kw: Dict, x: np.ndarray, a: np.ndarray) -> np.ndarray:
         out = div(jnp.asarray(a), xj, cfg)
     elif key.startswith("rsqrt/"):
         out = rsqrt(xj, cfg)
+    elif key.startswith("softmax/"):
+        out = softmax(xj, -1, cfg)
     else:
         out = recip(xj, cfg)
     return np.asarray(out, np.float32)
@@ -205,6 +243,51 @@ def generate_rsqrt(path: Path = RSQRT_PATH) -> Path:
     path.parent.mkdir(parents=True, exist_ok=True)
     np.savez_compressed(path, **arrays)
     return path
+
+
+def generate_softmax(path: Path = SOFTMAX_PATH) -> Path:
+    """Recompute every softmax cell and (over)write the committed vectors."""
+    import jax
+
+    x = golden_softmax_inputs()
+    arrays = {"inputs": x}
+    for key, kw in golden_softmax_cells():
+        arrays["out:" + key] = _compute(key, kw, x, x).view(np.uint32)
+    arrays["meta"] = np.frombuffer(json.dumps({
+        "version": 1, "jax": jax.__version__, "numpy": np.__version__,
+    }).encode(), np.uint8)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(path, **arrays)
+    return path
+
+
+def check_softmax(path: Path = SOFTMAX_PATH,
+                  tolerance_ulp: int = 0) -> List[Dict]:
+    """Recompute the softmax store and diff. Returns failures (empty = pass)."""
+    if not path.exists():
+        return [{"cell": "softmax store", "error": f"missing {path} — run "
+                 "`python -m repro.eval.golden --generate --store softmax`"}]
+    with np.load(path) as z:
+        x = z["inputs"]
+        stored = {k[len("out:"):]: z[k] for k in z.files if k.startswith("out:")}
+    failures: List[Dict] = []
+    for key, kw in golden_softmax_cells():
+        if key not in stored:
+            failures.append({"cell": key, "error": "missing from store"})
+            continue
+        want = stored[key].view(np.float32)
+        got = _compute(key, kw, x, x)
+        d = ulp.ulp_diff(got, want)
+        bad = d > tolerance_ulp
+        if bad.any():
+            i = np.unravel_index(int(np.argmax(d)), d.shape)
+            failures.append({
+                "cell": key,
+                "n_mismatch": int(bad.sum()),
+                "max_ulp_drift": int(d.max()),
+                "first_row_col": tuple(int(j) for j in i),
+            })
+    return failures
 
 
 def check_rsqrt(path: Path = RSQRT_PATH, tolerance_ulp: int = 0) -> List[Dict]:
@@ -294,13 +377,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--generate", action="store_true")
     ap.add_argument("--check", action="store_true")
-    ap.add_argument("--store", choices=("recip", "divide", "rsqrt", "all"),
+    ap.add_argument("--store",
+                    choices=("recip", "divide", "rsqrt", "softmax", "all"),
                     default="all", help="which committed store(s) to act on")
     ap.add_argument("--tolerance-ulp", type=int, default=0)
     args = ap.parse_args(argv)
     do_recip = args.store in ("recip", "all")
     do_divide = args.store in ("divide", "all")
     do_rsqrt = args.store in ("rsqrt", "all")
+    do_softmax = args.store in ("softmax", "all")
     if args.generate:
         if do_recip:
             p = generate()
@@ -316,6 +401,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"wrote {p} ({p.stat().st_size} bytes, "
                   f"{len(golden_rsqrt_cells())} cells x "
                   f"{golden_rsqrt_inputs().size} points)")
+        if do_softmax:
+            p = generate_softmax()
+            print(f"wrote {p} ({p.stat().st_size} bytes, "
+                  f"{len(golden_softmax_cells())} cells x "
+                  f"{golden_softmax_inputs().shape} logit rows)")
         return 0
     failures: List[Dict] = []
     if do_recip:
@@ -324,6 +414,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         failures += check_divide(tolerance_ulp=args.tolerance_ulp)
     if do_rsqrt:
         failures += check_rsqrt(tolerance_ulp=args.tolerance_ulp)
+    if do_softmax:
+        failures += check_softmax(tolerance_ulp=args.tolerance_ulp)
     if failures:
         print("GOLDEN-VECTOR REGRESSION:")
         for f in failures:
@@ -331,7 +423,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 1
     n = (len(golden_cells()) if do_recip else 0) + (
         len(golden_div_cells()) if do_divide else 0) + (
-        len(golden_rsqrt_cells()) if do_rsqrt else 0)
+        len(golden_rsqrt_cells()) if do_rsqrt else 0) + (
+        len(golden_softmax_cells()) if do_softmax else 0)
     print(f"golden vectors ok ({n} cells)")
     return 0
 

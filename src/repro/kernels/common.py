@@ -17,7 +17,8 @@ from repro.core.seeds import SeedTable, compute_segments, rsqrt_seed_table
 # field-for-field — the underflow="ftz" twins are pinned bit-identical to
 # the fused kernels by tests/test_underflow_policy.py.
 from repro.core.fpparts import (  # noqa: F401  (re-exported kernel-side)
-    F32_SIGN, F32_EXP_MASK, F32_MAN_MASK, F32_ONE_BITS, F32_IMPLICIT,
+    F32_SIGN, F32_MAG_MASK, F32_EXP_MASK, F32_MAN_MASK, F32_ONE_BITS,
+    F32_IMPLICIT,
 )
 
 
@@ -145,8 +146,55 @@ def divide_f32_bits(a: jax.Array, b: jax.Array, table: SeedTable, n: int,
     return jnp.where(a_nan | b_nan, jnp.float32(np.nan), q)
 
 
+def rsqrt_f32_bits(x: jax.Array, table: SeedTable, newton_iters: int) -> jax.Array:
+    """Full f32 rsqrt with explicit bit-level unpack and the IEEE edge
+    contract — the fused-kernel twin of ``core.taylor._rsqrt_bits``.
+
+    Same datapath as :func:`rsqrt_f32` (even/odd exponent split onto one
+    seed octave, PWL chord seed, Newton with the residual-compensated final
+    step) but classification is bit tests and every edge class is handled:
+    FTZ semantics as everywhere in the kernels — a zero exponent field
+    (zero or subnormal) is the zero class -> signed inf; +inf -> +0;
+    negative operands (including -inf) and nans -> nan. Bit-identical to
+    the jnp twin under ``underflow="ftz"`` (the seed ladder selects the
+    same segment the jnp ``take`` does, and the Newton arithmetic is
+    shared).
+    """
+    from repro.core.taylor import _newton_rsqrt
+
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits & F32_SIGN
+    mag = bits & F32_MAG_MASK
+    exp = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
+    man_bits = bits & F32_MAN_MASK
+    x_zero = exp == 0                       # FTZ: zero/subnormal class
+    x_inf = mag == F32_EXP_MASK
+    x_nan = mag > F32_EXP_MASK
+    man = jax.lax.bitcast_convert_type(man_bits | F32_ONE_BITS, jnp.float32)
+    ef = exp - 127 + 1                      # frexp convention: |x| = (man/2)*2^ef
+    s = ef >> 1                             # floor(ef / 2)
+    odd = ef - 2 * s                        # 0 or 1
+    u = jnp.where(odd == 1, man, man * jnp.float32(0.5))   # in [0.5, 2)
+    y = _newton_rsqrt(u, seed_ladder(u, table), newton_iters)
+    pw = jax.lax.bitcast_convert_type(
+        jnp.clip(127 - s, 1, 254).astype(jnp.uint32) << 23, jnp.float32)
+    r = y * pw                              # exact: rsqrt results are normal
+    inf_s = jax.lax.bitcast_convert_type(F32_EXP_MASK | sign, jnp.float32)
+    r = jnp.where(x_zero, inf_s, r)                      # +-0/sub -> +-inf
+    r = jnp.where(x_inf, jnp.float32(0.0), r)            # +inf -> +0
+    neg = (sign != 0) & ~x_zero                          # x < 0 -> nan
+    return jnp.where(neg | x_nan, jnp.float32(np.nan), r)
+
+
 def rsqrt_f32(x: jax.Array, table: SeedTable, newton_iters: int) -> jax.Array:
-    """rsqrt for strictly-positive x (norm denominators): PWL seed + Newton."""
+    """rsqrt for strictly-positive x (norm denominators): PWL seed + Newton.
+
+    The final Newton step is residual-compensated (core.taylor._newton_rsqrt
+    — two Dekker two-products) so the fused norms deliver the same ~0.5 ULP
+    the jnp rsqrt twin does, instead of the ~2 ULP plain steps leave.
+    """
+    from repro.core.taylor import _newton_rsqrt
+
     bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
     exp = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
     man = jax.lax.bitcast_convert_type(
@@ -156,9 +204,7 @@ def rsqrt_f32(x: jax.Array, table: SeedTable, newton_iters: int) -> jax.Array:
     s = exp >> 1  # floor division (arithmetic shift)
     odd = exp - 2 * s  # 0 or 1
     u = jnp.where(odd == 1, man * 2.0, man) * 0.5  # in [0.5, 2)
-    y = seed_ladder(u, table)
-    for _ in range(newton_iters):
-        y = y * (1.5 - 0.5 * u * y * y)
+    y = _newton_rsqrt(u, seed_ladder(u, table), newton_iters)
     # rsqrt(x) = rsqrt(2u * 2^(2s + odd - 1)) ... assembled as y * 2^-(s)/sqrt(2)*...
     # We defined u = man' / 2 with man' in [1,4), x = man' * 2^(2s).
     # rsqrt(x) = rsqrt(2u) * 2^-s = y / sqrt(2) * 2^-s.

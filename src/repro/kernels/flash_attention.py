@@ -34,7 +34,8 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, causal: bool, block_q: int, block_k: int,
-                  n_k_blocks: int, table, n_iters: int, schedule: str):
+                  n_k_blocks: int, sk_real: int, table, n_iters: int,
+                  schedule: str, skip_masked_k: bool):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -44,33 +45,54 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)              # (bq, hd)
-    k = k_ref[0].astype(jnp.float32)              # (bk, hd)
-    v = v_ref[0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if causal:
-        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if sk_real < n_k_blocks * block_k:
+            # Ragged key length: positions past sk_real are wrapper padding,
+            # masked out of every row's statistics (exp(NEG_INF - m) = 0).
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos < sk_real, s, NEG_INF)
 
-    m_prev = m_ref[0]                              # (bq, 1)
-    l_prev = l_ref[0]
-    m_cur = jnp.max(s, axis=-1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    p = jnp.exp(s - m_new)                         # (bq, bk)
-    corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
-    l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
-    acc = corr * acc_ref[0] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_prev = m_ref[0]                              # (bq, 1)
+        l_prev = l_ref[0]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc_ref[0] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
-    m_ref[0] = m_new
-    l_ref[0] = l_new
-    acc_ref[0] = acc
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+        acc_ref[0] = acc
 
-    @pl.when(ki == n_k_blocks - 1)
+    if causal and skip_masked_k:
+        # Early skip for fully-masked key blocks (the whole block sits
+        # strictly above the diagonal: ki*block_k > (qi+1)*block_q - 1).
+        # Bit-identical to running them — a skipped block's contribution is
+        # exactly p = exp(NEG_INF - m_prev) = 0 with m/l/acc unchanged —
+        # but saves the QK^T matmul and the exp/rescale arithmetic. The
+        # finalize moves to the last *contributing* block.
+        pl.when(ki * block_k <= (qi + 1) * block_q - 1)(_accumulate)
+        last_k = jnp.minimum(jnp.int32(n_k_blocks - 1),
+                             ((qi + 1) * block_q - 1) // block_k)
+    else:
+        _accumulate()
+        last_k = n_k_blocks - 1
+
+    @pl.when(ki == last_k)
     def _finalize():
         # the paper's division unit: 1/l via PWL seed + Taylor refinement
+        # (schedule="goldschmidt" runs the joint residual recurrence)
         rl = common.recip_f32_bits(l_ref[0], table, n_iters, schedule)
         o_ref[0] = (acc_ref[0] * rl).astype(o_ref.dtype)
 
@@ -78,13 +100,21 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "block_q", "block_k", "n_iters",
-                     "precision_bits", "schedule", "interpret"))
+                     "precision_bits", "schedule", "sk_real",
+                     "skip_masked_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
                     block_q: int = DEFAULT_BLOCK_Q,
                     block_k: int = DEFAULT_BLOCK_K,
                     n_iters: int = 2, precision_bits: int = 24,
-                    schedule: str = "factored", interpret: bool = True):
-    """q/k/v: (BH, S, hd) -> (BH, S, hd). Causal flash attention, tsdiv softmax."""
+                    schedule: str = "factored", sk_real: int | None = None,
+                    skip_masked_k: bool = True, interpret: bool = True):
+    """q/k/v: (BH, S, hd) -> (BH, S, hd). Causal flash attention, tsdiv softmax.
+
+    Block-multiple shapes only — ``kernels.ops.flash_attention`` pads ragged
+    sequences and passes ``sk_real`` so padded key positions are masked
+    in-kernel. ``skip_masked_k=False`` disables the above-diagonal
+    early-skip (kept as a knob so the bit-identity of the skip is testable).
+    """
     bh, sq, hd = q.shape
     sk = k.shape[1]
     block_q = min(block_q, sq)
@@ -96,8 +126,9 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, block_q=block_q,
-        block_k=block_k, n_k_blocks=nk, table=table, n_iters=n_iters,
-        schedule=schedule)
+        block_k=block_k, n_k_blocks=nk, sk_real=sk if sk_real is None else sk_real,
+        table=table, n_iters=n_iters, schedule=schedule,
+        skip_masked_k=skip_masked_k)
 
     out, _, _, _ = pl.pallas_call(
         kernel,

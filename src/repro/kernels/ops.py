@@ -128,6 +128,38 @@ def tsdiv_divide(a, b, n_iters: int = 2, precision_bits: int = 24,
     return _from_2d(y, n, shape).astype(orig_dtype)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tsdiv_rsqrt(x, newton_iters: int = 2, n_segments: int = 16):
+    """Fused full-edge rsqrt kernel with analytic VJP (bitcasts bar autodiff):
+    d(x^-1/2) = -r^3/2 dx, reusing the kernel's own r. The
+    mode="taylor_pallas"/"goldschmidt_pallas" path of division_modes.rsqrt."""
+    orig_dtype, shape = x.dtype, x.shape
+    if x.size == 0:      # no lanes to launch; keep the shape/dtype contract
+        return jax.lax.rsqrt(x.astype(jnp.float32)).astype(orig_dtype)
+    x2, n = _to_2d(x.astype(jnp.float32))
+    y = tsdiv_k.tsdiv_rsqrt_2d(x2, newton_iters=newton_iters,
+                               n_segments=n_segments, interpret=INTERPRET)
+    return _from_2d(y, n, shape).astype(orig_dtype)
+
+
+def _rsqrt_fwd(x, newton_iters, n_segments):
+    r = tsdiv_rsqrt(x, newton_iters, n_segments)
+    return r, r
+
+
+def _rsqrt_bwd(newton_iters, n_segments, r, g):
+    # Same contract as the jnp twin's custom_jvp rule (fpparts.jnp_rsqrt):
+    # edge lanes (r = ±inf/nan) and lanes whose analytic -r^3/2 overflows
+    # f32 get zero gradient, never nan poison.
+    rf = jnp.where(jnp.isfinite(r), r, 0.0)
+    coeff = jnp.float32(-0.5) * rf * rf * rf
+    coeff = jnp.where(jnp.isfinite(coeff), coeff, 0.0)
+    return (g * coeff,)
+
+
+tsdiv_rsqrt.defvjp(_rsqrt_fwd, _rsqrt_bwd)
+
+
 def _divide_fwd(a, b, n_iters, precision_bits, schedule):
     q = tsdiv_divide(a, b, n_iters, precision_bits, schedule)
     return q, (q, b)
@@ -149,8 +181,15 @@ def _divide_bwd(n_iters, precision_bits, schedule, res, g):
 tsdiv_divide.defvjp(_divide_fwd, _divide_bwd)
 
 
-def rmsnorm(x, w, *, eps: float = 1e-6, newton_iters: int = 2):
-    """RMSNorm over the last dim of any (..., D) array."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def rmsnorm(x, w, eps: float = 1e-6, newton_iters: int = 2,
+            n_segments: int = 16):
+    """RMSNorm over the last dim of any (..., D) array.
+
+    Analytic VJP (the pallas_call body bars autodiff): with
+    r = rsqrt(mean(x^2) + eps), dx = r*w*g - (r^3/D) * x * sum(g*x*w) and
+    dw = sum_batch(g * x * r) — the backward runs in plain jnp.
+    """
     shape = x.shape
     d = shape[-1]
     d_pad = -(-d // _LANE) * _LANE
@@ -160,13 +199,38 @@ def rmsnorm(x, w, *, eps: float = 1e-6, newton_iters: int = 2):
     x2 = jnp.pad(x2, ((0, m_pad - m), (0, d_pad - d)))
     wp = jnp.pad(w, (0, d_pad - d))
     y = rmsnorm_k.rmsnorm_2d(x2, wp, eps=eps, newton_iters=newton_iters,
-                             d_real=d, interpret=INTERPRET)
+                             n_segments=n_segments, d_real=d,
+                             interpret=INTERPRET)
     return y[:m, :d].reshape(shape)
 
 
-def softmax(x, *, n_iters: int = 2, precision_bits: int = 24,
+def _rmsnorm_fwd(x, w, eps, newton_iters, n_segments):
+    return rmsnorm(x, w, eps, newton_iters, n_segments), (x, w)
+
+
+def _rmsnorm_bwd(eps, newton_iters, n_segments, res, g):
+    x, w = res
+    xf, wf, gf = (t.astype(jnp.float32) for t in (x, w, g))
+    d = x.shape[-1]
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True)
+                      + jnp.float32(eps))
+    inner = jnp.sum(gf * xf * wf, axis=-1, keepdims=True)
+    gx = r * wf * gf - (r * r * r / d) * xf * inner
+    gw = jnp.sum(gf * xf * r, axis=tuple(range(x.ndim - 1)))
+    return gx.astype(x.dtype), gw.astype(w.dtype)
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def softmax(x, n_iters: int = 2, precision_bits: int = 24,
             schedule: str = "factored"):
-    """Softmax over the last dim of any (..., D) array (pad masked to -inf)."""
+    """Softmax over the last dim of any (..., D) array (pad masked to -inf).
+
+    Analytic VJP: dx = p * (g - sum(p*g)) reusing the kernel's own output
+    (fully-masked rows carry p = 0, so their gradient is exactly zero).
+    """
     shape = x.shape
     d = shape[-1]
     d_pad = -(-d // _LANE) * _LANE
@@ -180,11 +244,39 @@ def softmax(x, *, n_iters: int = 2, precision_bits: int = 24,
     return y[:m, :d].reshape(shape)
 
 
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+def _softmax_fwd(x, n_iters, precision_bits, schedule):
+    p = softmax(x, n_iters, precision_bits, schedule)
+    return p, p
+
+
+def _softmax_bwd(n_iters, precision_bits, schedule, p, g):
+    pf = p.astype(jnp.float32)
+    pf = jnp.where(jnp.isfinite(pf), pf, 0.0)    # nan rows: masked gradient
+    gf = g.astype(jnp.float32)
+    dot = jnp.sum(pf * gf, axis=-1, keepdims=True)
+    return ((pf * (gf - dot)).astype(p.dtype),)
+
+
+softmax.defvjp(_softmax_fwd, _softmax_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, n_iters: int = 2,
-                    precision_bits: int = 24):
+                    precision_bits: int = 24, schedule: str = "factored"):
     """Flash attention with tsdiv softmax. q/k/v: (..., S, hd); leading dims
-    flattened to the batch*heads grid axis."""
+    flattened to the batch*heads grid axis.
+
+    Ragged sequence lengths (any sq/sk, not just block multiples) are
+    handled here: q is padded up to a block_q multiple (the padded rows are
+    sliced off the output), k/v up to a block_k multiple with the padded key
+    positions masked to NEG_INF in-kernel (``sk_real``) so they contribute
+    exp(NEG_INF - m) = 0 to every real row's statistics.
+
+    Analytic VJP: the forward is the fused kernel; the backward recomputes
+    the score matrix in plain jnp (the standard attention gradient — O(S^2)
+    memory, vs the O(S) forward; a fused backward kernel is future work).
+    """
     from . import flash_attention as fa
 
     lead = q.shape[:-2]
@@ -192,10 +284,51 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     q3 = q.reshape(-1, s, hd)
     k3 = k.reshape(-1, k.shape[-2], hd)
     v3 = v.reshape(-1, v.shape[-2], hd)
-    o = fa.flash_attention(q3, k3, v3, causal=causal, block_q=block_q,
-                           block_k=block_k, n_iters=n_iters,
-                           precision_bits=precision_bits, interpret=INTERPRET)
-    return o.reshape(*lead, s, hd)
+    sk = k3.shape[1]
+    bq, bk = min(block_q, s), min(block_k, sk)
+    sq_pad = -(-s // bq) * bq
+    sk_pad = -(-sk // bk) * bk
+    if sq_pad != s:
+        q3 = jnp.pad(q3, ((0, 0), (0, sq_pad - s), (0, 0)))
+    if sk_pad != sk:
+        k3 = jnp.pad(k3, ((0, 0), (0, sk_pad - sk), (0, 0)))
+        v3 = jnp.pad(v3, ((0, 0), (0, sk_pad - sk), (0, 0)))
+    o = fa.flash_attention(q3, k3, v3, causal=causal, block_q=bq,
+                           block_k=bk, n_iters=n_iters,
+                           precision_bits=precision_bits, schedule=schedule,
+                           sk_real=sk, interpret=INTERPRET)
+    return o[:, :s, :].reshape(*lead, s, hd)
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k, n_iters, precision_bits,
+               schedule):
+    o = flash_attention(q, k, v, causal, block_q, block_k, n_iters,
+                        precision_bits, schedule)
+    return o, (q, k, v)
+
+
+def _flash_bwd(causal, block_q, block_k, n_iters, precision_bits, schedule,
+               res, g):
+    from . import flash_attention as fa
+
+    q, k, v = res
+    qf, kf, vf, gf = (t.astype(jnp.float32) for t in (q, k, v, g))
+    scale = jnp.float32(1.0 / np.sqrt(q.shape[-1]))
+    s = jnp.einsum("...qh,...kh->...qk", qf, kf) * scale
+    if causal:
+        mask = (jnp.arange(s.shape[-2])[:, None]
+                >= jnp.arange(s.shape[-1])[None, :])
+        s = jnp.where(mask, s, fa.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("...qk,...qh->...kh", p, gf)
+    dp = jnp.einsum("...qh,...kh->...qk", gf, vf)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("...qk,...kh->...qh", ds, kf) * scale
+    dk = jnp.einsum("...qk,...qh->...kh", ds, qf) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
 
 
 def ilm_mul(a, b, *, iters: int = 16):

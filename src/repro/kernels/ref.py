@@ -40,8 +40,11 @@ def rmsnorm_ref(x, w, *, eps: float = 1e-6, newton_iters: int = 2,
     xf = x.astype(jnp.float32)
     d = xf.shape[-1] if d_real is None else d_real
     ss = jnp.sum(xf * xf, axis=-1, keepdims=True) / d
-    r = common.rsqrt_f32(ss + jnp.float32(eps), rsqrt_seed_table(n_segments),
-                         newton_iters)
+    se = ss + jnp.float32(eps)
+    r = common.rsqrt_f32(se, rsqrt_seed_table(n_segments), newton_iters)
+    # same row edge classes as the kernel: nan propagates, inf scales by 0
+    r = jnp.where(jnp.isinf(se), jnp.float32(0.0), r)
+    r = jnp.where(jnp.isnan(se), jnp.float32(jnp.nan), r)
     return (xf * r * w.astype(jnp.float32)).astype(x.dtype)
 
 

@@ -24,7 +24,13 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, newton_iters: int,
     # padded tail (if any) contributes zeros; divide by the *real* dim
     ss = jnp.sum(x * x, axis=-1, keepdims=True) * jnp.float32(1.0 / d_real)
     table = rsqrt_seed_table(n_segments)
-    r = common.rsqrt_f32(ss + jnp.float32(eps), table, newton_iters)
+    se = ss + jnp.float32(eps)
+    r = common.rsqrt_f32(se, table, newton_iters)
+    # rsqrt_f32 assumes strictly-positive normal input; pin the row edge
+    # classes the reduction can produce: nan rows propagate, overflowing
+    # sum-of-squares rows scale by rsqrt(inf) = 0 (as lax.rsqrt does).
+    r = jnp.where(jnp.isinf(se), jnp.float32(0.0), r)
+    r = jnp.where(jnp.isnan(se), jnp.float32(jnp.nan), r)
     o_ref[...] = (x * r * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 

@@ -20,11 +20,17 @@ from . import common
 def _softmax_kernel(x_ref, o_ref, *, n: int, precision_bits: int, schedule: str):
     x = x_ref[...].astype(jnp.float32)
     xmax = jnp.max(x, axis=-1, keepdims=True)
-    ex = jnp.exp(x - xmax)
+    # Fully-masked rows (all logits -inf: masked consumers and the wrapper's
+    # pad rows) must come out as zeros, not exp(-inf - -inf) = nan; rows
+    # with at least one finite logit have s >= exp(0) = 1, so s == 0 is an
+    # exact tag for them after the guard below.
+    mfin = jnp.where(jnp.isfinite(xmax), xmax, jnp.float32(0.0))
+    ex = jnp.exp(x - mfin)
     s = jnp.sum(ex, axis=-1, keepdims=True)
     table = compute_segments(n, precision_bits)
     rs = common.recip_f32_bits(s, table, n, schedule)
-    o_ref[...] = (ex * rs).astype(o_ref.dtype)
+    o_ref[...] = jnp.where(s == 0.0, jnp.float32(0.0),
+                           ex * rs).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "precision_bits", "schedule",

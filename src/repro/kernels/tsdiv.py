@@ -40,6 +40,10 @@ def _divide_kernel(a_ref, b_ref, o_ref, *, table: SeedTable, n: int, schedule: s
     o_ref[...] = common.divide_f32_bits(a_ref[...], b_ref[...], table, n, schedule)
 
 
+def _rsqrt_kernel(x_ref, o_ref, *, table: SeedTable, newton_iters: int):
+    o_ref[...] = common.rsqrt_f32_bits(x_ref[...], table, newton_iters)
+
+
 def _grid_spec(shape, block):
     bm, bn = min(block[0], shape[0]), min(block[1], shape[1])
     grid = (pl.cdiv(shape[0], bm), pl.cdiv(shape[1], bn))
@@ -96,6 +100,31 @@ def tsdiv_recip_2d(x, *, n_iters: int = 2, precision_bits: int = 24,
     grid, spec = _grid_spec(x.shape, block)
     return pl.pallas_call(
         functools.partial(_recip_kernel, table=table, n=n_iters, schedule=schedule),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("newton_iters", "n_segments",
+                                             "block", "interpret"))
+def tsdiv_rsqrt_2d(x, *, newton_iters: int = 2, n_segments: int = 16,
+                   block=DEFAULT_BLOCK, interpret: bool = True):
+    """rsqrt of an f32 (M, N) array via the fused full-edge rsqrt kernel.
+
+    The mode="taylor_pallas"/"goldschmidt_pallas" rsqrt datapath: PWL chord
+    seed + Newton with the residual-compensated final step, FTZ edge
+    contract in-kernel (``common.rsqrt_f32_bits``) — what
+    ``kernels.ops.tsdiv_rsqrt`` launches for ``division_modes.rsqrt``.
+    """
+    from repro.core.seeds import rsqrt_seed_table
+
+    table = rsqrt_seed_table(n_segments)
+    grid, spec = _grid_spec(x.shape, block)
+    return pl.pallas_call(
+        functools.partial(_rsqrt_kernel, table=table, newton_iters=newton_iters),
         grid=grid,
         in_specs=[spec],
         out_specs=spec,

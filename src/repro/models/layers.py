@@ -9,11 +9,9 @@ from repro.configs.base import ModelConfig
 
 
 def rms_norm(x, w, div: dm.DivisionConfig, eps: float = 1e-6):
-    """RMSNorm; the 1/sqrt is the paper-machinery rsqrt when div.mode != exact."""
-    xf = x.astype(jnp.float32)
-    ss = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    r = dm.rsqrt(ss + eps, div)
-    return (xf * r * w.astype(jnp.float32)).astype(x.dtype)
+    """RMSNorm through the division unit's consumer dispatch: the Pallas
+    modes run the fused kernel, everything else the jnp twin — one knob."""
+    return dm.rmsnorm(x, w, div, eps=eps)
 
 
 def rope(x, positions, theta: float):

@@ -1,0 +1,402 @@
+"""Consumer-tier conformance: mode-faithful softmax/rmsnorm/attention/rsqrt.
+
+What PR 4's grid could not see: ``division_modes.rsqrt`` silently ran the
+jnp Taylor datapath for the Pallas and ILM modes, and ``softmax`` never
+routed to the fused kernel at all — a user who configured the fused unit got
+a different implementation with no error. This module gates the fix:
+
+  (a) dispatch spies: every consumer op routes each mode to the
+      implementation the config names (fused kernels for the Pallas modes,
+      with schedule="goldschmidt" threaded; real ILM arithmetic for ilm) and
+      the jnp modes never touch a kernel;
+  (b) masked softmax: fully-masked rows return zeros in every mode (never
+      0 * recip(0) = nan), single-survivor rows are one-hot, bf16 included;
+  (c) the consumer gates: row sums within 2 ULP-equivalents of 1.0 and
+      outputs within the documented vs-exact-twin tolerance (non-ILM);
+  (d) the conformance grid carries the consumer cells and the committed
+      golden/softmax_v1.npz store checks bit-exact;
+  (e) rsqrt gradients ride a custom_jvp rule (subnormal primals stay exact,
+      gradient lanes degrade to zero rather than nan).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import division_modes as dm
+from repro.eval import conformance, consumers, golden, ulp
+
+NON_ILM = [
+    ("exact", "-"),
+    ("taylor", "paper"),
+    ("taylor", "factored"),
+    ("taylor_pallas", "factored"),
+    ("goldschmidt", "-"),
+    ("goldschmidt_pallas", "-"),
+]
+
+
+def _cfg(mode, sched="-"):
+    return dm.DivisionConfig(
+        mode=mode, schedule=sched if sched != "-" else "factored")
+
+
+# --------------------------------------------------------------- dispatch
+
+def test_softmax_pallas_modes_use_fused_kernel(monkeypatch):
+    """Both Pallas modes must lower softmax to the fused kernel, with the
+    schedule the mode names — never the jnp twin silently."""
+    from repro.kernels import ops as kops
+
+    schedules = []
+    real = kops.softmax
+
+    def spy(x, *, n_iters=2, precision_bits=24, schedule="factored"):
+        schedules.append(schedule)
+        return real(x, n_iters=n_iters, precision_bits=precision_bits,
+                    schedule=schedule)
+
+    monkeypatch.setattr(kops, "softmax", spy)
+    x = jnp.asarray(np.linspace(-3, 3, 8 * 128).reshape(8, 128), jnp.float32)
+    s = dm.softmax(x, -1, dm.DivisionConfig(mode="taylor_pallas"))
+    np.testing.assert_allclose(np.asarray(s).sum(-1), 1.0, rtol=1e-6)
+    assert schedules == ["factored"]
+    schedules.clear()
+    dm.softmax(x, -1, dm.DivisionConfig(mode="goldschmidt_pallas"))
+    assert schedules == ["goldschmidt"]
+
+
+def test_rsqrt_pallas_modes_use_fused_kernel(monkeypatch):
+    """The PR 4 silent fallthrough, pinned dead: both Pallas modes lower
+    rsqrt to the fused kernel, never the jnp Taylor twin."""
+    from repro.core import taylor
+    from repro.kernels import ops as kops
+
+    calls = []
+    real = kops.tsdiv_rsqrt
+
+    def spy(x, newton_iters=2, n_segments=16):
+        calls.append(newton_iters)
+        return real(x, newton_iters, n_segments)
+
+    def forbidden(*a, **kw):
+        raise AssertionError("Pallas rsqrt fell back to the jnp twin")
+
+    monkeypatch.setattr(kops, "tsdiv_rsqrt", spy)
+    monkeypatch.setattr(taylor, "rsqrt", forbidden)
+    x = jnp.asarray([0.25, 4.0, 9.0], jnp.float32)
+    for mode in ("taylor_pallas", "goldschmidt_pallas"):
+        r = dm.rsqrt(x, dm.DivisionConfig(mode=mode, rsqrt_newton=3))
+        np.testing.assert_allclose(np.asarray(r), [2.0, 0.5, 1 / 3.0],
+                                   rtol=1e-6)
+    assert calls == [3, 3]
+
+
+def test_rmsnorm_and_attention_pallas_dispatch(monkeypatch):
+    from repro.kernels import ops as kops
+
+    rms_calls, fa_scheds = [], []
+    real_rms, real_fa = kops.rmsnorm, kops.flash_attention
+
+    def rms_spy(x, w, *, eps=1e-6, newton_iters=2, n_segments=16):
+        rms_calls.append((newton_iters, n_segments))
+        return real_rms(x, w, eps=eps, newton_iters=newton_iters,
+                        n_segments=n_segments)
+
+    def fa_spy(q, k, v, *, schedule="factored", **kw):
+        fa_scheds.append(schedule)
+        return real_fa(q, k, v, schedule=schedule, **kw)
+
+    monkeypatch.setattr(kops, "rmsnorm", rms_spy)
+    monkeypatch.setattr(kops, "flash_attention", fa_spy)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    dm.rmsnorm(x, w, dm.DivisionConfig(mode="taylor_pallas"))
+    assert rms_calls == [(2, 16)]
+    q = jnp.asarray(rng.normal(size=(2, 64, 32)).astype(np.float32))
+    dm.attention(q, q, q, dm.DivisionConfig(mode="taylor_pallas"))
+    dm.attention(q, q, q, dm.DivisionConfig(mode="goldschmidt_pallas"))
+    assert fa_scheds == ["factored", "goldschmidt"]
+
+
+def test_jnp_modes_never_touch_kernels(monkeypatch):
+    """exact/taylor/goldschmidt/ilm consumers must not launch a kernel."""
+    from repro.kernels import ops as kops
+
+    def forbidden(*a, **kw):
+        raise AssertionError("jnp mode dispatched to a Pallas kernel")
+
+    for name in ("softmax", "rmsnorm", "flash_attention", "tsdiv_rsqrt",
+                 "tsdiv_recip", "tsdiv_divide"):
+        monkeypatch.setattr(kops, name, forbidden)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(1, 16, 8)).astype(np.float32))
+    for mode in ("exact", "taylor", "goldschmidt", "ilm"):
+        cfg = dm.DivisionConfig(mode=mode)
+        dm.softmax(x, -1, cfg)
+        dm.rmsnorm(x, w, cfg)
+        dm.rsqrt(jnp.abs(x) + 0.1, cfg)
+        dm.attention(q, q, q, cfg)
+
+
+def test_rsqrt_ilm_is_genuinely_ilm():
+    """mode="ilm" rsqrt runs the 12-bit ILM Newton arithmetic — measurably
+    approximate, not the silently-substituted 24-bit Taylor twin."""
+    x = jnp.asarray(np.linspace(1.0, 4.0, 512), jnp.float32)
+    r = np.asarray(dm.rsqrt(x, dm.DivisionConfig(mode="ilm")))
+    rel = np.abs(r * np.sqrt(np.asarray(x)) - 1)
+    assert rel.max() < 5e-3          # 12-bit regime
+    assert rel.max() > 1e-6          # genuinely not the f32 datapath
+
+
+def test_softmax_axis_handling_pallas():
+    """Non-last axes move through the kernel path and back."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    cfg = dm.DivisionConfig(mode="taylor_pallas")
+    s0 = np.asarray(dm.softmax(x, 0, cfg))
+    np.testing.assert_allclose(s0.sum(0), 1.0, rtol=1e-5)
+    e0 = np.asarray(jax.nn.softmax(x, 0))
+    np.testing.assert_allclose(s0, e0, atol=1e-6)
+
+
+# ---------------------------------------------------------- masked softmax
+
+@pytest.mark.parametrize("mode,sched", NON_ILM + [("ilm", "-")])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_softmax_masked_matrix(mode, sched, dtype):
+    """all-False row -> zeros; single-survivor row -> one-hot; surviving
+    rows renormalize — in every mode, both dtypes."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(3, 16)), dtype)
+    where = jnp.asarray(np.stack([np.zeros(16, bool),
+                                  np.eye(16, dtype=bool)[5],
+                                  np.arange(16) < 9]))
+    s = np.asarray(dm.softmax(x, -1, _cfg(mode, sched), where=where),
+                   np.float32)
+    assert np.all(s[0] == 0.0), (mode, s[0])
+    tol = 2e-3 if mode == "ilm" else 2e-6
+    assert abs(s[1, 5] - 1.0) <= tol, (mode, s[1, 5])
+    assert np.all(s[1, np.arange(16) != 5] == 0.0)
+    assert np.all(s[2, 9:] == 0.0)
+    assert abs(s[2].sum() - 1.0) <= (1e-2 if dtype == jnp.bfloat16 else tol)
+    assert np.all(np.isfinite(s))
+
+
+@pytest.mark.parametrize("mode,sched", NON_ILM)
+def test_softmax_all_neg_inf_row_returns_zeros(mode, sched):
+    """The unmasked spelling of a fully-masked row (all logits -inf)."""
+    x = jnp.asarray(np.array([[-np.inf] * 8, [0.0] + [-np.inf] * 7]),
+                    jnp.float32)
+    s = np.asarray(dm.softmax(x, -1, _cfg(mode, sched)))
+    assert np.all(s[0] == 0.0), (mode, s[0])
+    assert s[1, 0] == pytest.approx(1.0, abs=2e-6) and np.all(s[1, 1:] == 0.0)
+
+
+def test_softmax_masked_grad_no_nan():
+    """Gradients through a batch containing a fully-masked row stay finite."""
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(2, 8)), jnp.float32)
+    where = jnp.asarray(np.stack([np.zeros(8, bool), np.ones(8, bool)]))
+    for mode, sched in NON_ILM:
+        g = jax.grad(lambda v: dm.softmax(v, -1, _cfg(mode, sched),
+                                          where=where)[1].sum())(x)
+        assert bool(jnp.all(jnp.isfinite(g))), mode
+
+
+# ------------------------------------------------------------ accuracy gates
+
+@pytest.fixture(scope="module")
+def softmax_corpus():
+    strata = consumers.softmax_rows("float32", n_rows=32, d=128, seed=5)
+    return {k: jnp.asarray(v) for k, v in strata.items()}
+
+
+@pytest.mark.parametrize("mode,sched", NON_ILM)
+def test_softmax_row_sums_within_2_ulp(softmax_corpus, mode, sched):
+    """The acceptance gate: at the conformance shape (D=128) every non-ILM
+    mode's rows sum to 1 within 2 ULP-equivalents. (Larger D adds the f32
+    accumulation error of the sum itself — shared with the exact twin.)"""
+    cfg = _cfg(mode, sched)
+    for name, xj in softmax_corpus.items():
+        out = np.asarray(dm.softmax(xj, -1, cfg))
+        rs = consumers.row_sum_ulp1(out).max()
+        assert rs <= consumers.ROW_SUM_GATE_ULP, (mode, name, rs)
+
+
+@pytest.mark.parametrize("mode,sched", [m for m in NON_ILM
+                                        if m[0] != "exact"])
+def test_softmax_vs_exact_twin_tolerance(softmax_corpus, mode, sched):
+    cfg = _cfg(mode, sched)
+    for name, xj in softmax_corpus.items():
+        out = np.asarray(dm.softmax(xj, -1, cfg))
+        twin = np.asarray(dm.softmax(xj, -1, dm.EXACT))
+        oracle = consumers.softmax_oracle(np.asarray(xj, np.float64))
+        ve = consumers.vs_exact_int_ulp(out, twin, oracle)
+        assert ve <= consumers.VS_EXACT_GATE_ULP, (mode, name, ve)
+
+
+@pytest.mark.parametrize("mode,sched", [m for m in NON_ILM
+                                        if m[0] != "exact"])
+def test_rmsnorm_vs_exact_twin_tolerance(mode, sched):
+    cfg = _cfg(mode, sched)
+    strata = consumers.rmsnorm_rows("float32", n_rows=32, d=128, seed=6)
+    w = consumers.rmsnorm_weight(128, seed=6)
+    wj = jnp.asarray(w)
+    for name, xs in strata.items():
+        out = np.asarray(dm.rmsnorm(jnp.asarray(xs), wj, cfg))
+        twin = np.asarray(dm.rmsnorm(jnp.asarray(xs), wj, dm.EXACT))
+        oracle = consumers.rmsnorm_oracle(xs.astype(np.float64),
+                                          w.astype(np.float64))
+        ve = consumers.vs_exact_int_ulp(out, twin, oracle)
+        assert ve <= consumers.VS_EXACT_GATE_ULP, (mode, name, ve)
+
+
+@pytest.mark.parametrize("mode,sched", NON_ILM)
+def test_attention_close_to_exact_twin(mode, sched):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(2, 64, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 64, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 64, 32)).astype(np.float32))
+    for causal in (True, False):
+        o = np.asarray(dm.attention(q, k, v, _cfg(mode, sched),
+                                    causal=causal))
+        e = np.asarray(dm.attention(q, k, v, dm.EXACT, causal=causal))
+        assert np.max(np.abs(o - e)) <= 1e-5, (mode, causal)
+
+
+def test_attention_ilm_runs_and_is_approximate():
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(1, 16, 8)).astype(np.float32))
+    o = np.asarray(dm.attention(q, q, q, dm.DivisionConfig(mode="ilm")))
+    e = np.asarray(dm.attention(q, q, q, dm.EXACT))
+    dev = np.max(np.abs(o - e))
+    assert np.all(np.isfinite(o)) and dev < 1e-2 and dev > 1e-8
+
+
+def test_attention_ragged_seq_through_pallas_mode():
+    """Seq lens like 100 stream through the fused kernel via pad-and-mask."""
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(2, 100, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 100, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 100, 32)).astype(np.float32))
+    o = np.asarray(dm.attention(q, k, v, dm.DivisionConfig(mode="taylor_pallas")))
+    e = np.asarray(dm.attention(q, k, v, dm.EXACT))
+    assert o.shape == (2, 100, 32)
+    np.testing.assert_allclose(o, e, atol=5e-6)
+
+
+# -------------------------------------------------- grid + golden wiring
+
+def test_consumer_grid_cells_present():
+    cells = conformance.default_grid()
+    for op in consumers.CONSUMER_OPS:
+        got = {(c.mode, c.schedule, c.dtype) for c in cells if c.op == op}
+        for dt in ("float32", "bfloat16"):
+            assert ("exact", "-", dt) in got, op
+            assert ("taylor", "factored", dt) in got, op
+            assert ("taylor_pallas", "factored", dt) in got, op
+            assert ("goldschmidt_pallas", "-", dt) in got, op
+            assert ("ilm", "-", dt) in got, op
+    rs = {(c.mode, c.schedule) for c in cells if c.op == "rsqrt"}
+    # Both Pallas modes share the fused rsqrt kernel (no schedule knob), so
+    # one fused-kernel cell measures them both.
+    assert ("taylor_pallas", "factored") in rs
+
+
+@pytest.mark.parametrize("op", list(consumers.CONSUMER_OPS))
+def test_consumer_cell_runner_gates(op):
+    rep = conformance.run_cell(
+        conformance.Cell("taylor", "factored", 2, 24, op=op),
+        n_log=256, n_man=256)
+    assert rep["edge_failures"] == 0
+    assert rep["vs_exact_max_ulp"] <= consumers.VS_EXACT_GATE_ULP
+    if op == "softmax":
+        assert rep["row_sum_max_ulp1"] <= consumers.ROW_SUM_GATE_ULP
+    assert rep["pass"] is True
+
+
+def test_softmax_golden_vectors_unchanged():
+    """Committed op=softmax golden store: drift fails loudly, by cell name."""
+    assert golden.SOFTMAX_PATH.exists(), (
+        "softmax golden store missing — run "
+        "`python -m repro.eval.golden --generate --store softmax`")
+    failures = golden.check_softmax()
+    assert failures == [], failures
+
+
+# ------------------------------------------------------- rsqrt gradients
+
+def test_rsqrt_grad_matches_analytic():
+    for mode, sched in NON_ILM:
+        cfg = _cfg(mode, sched)
+        x = jnp.asarray([0.25, 2.0, 1e4, 2.0 ** -40], jnp.float32)
+        g = jax.grad(lambda v: dm.rsqrt(v, cfg).sum())(x)
+        want = -0.5 * np.asarray(x, np.float64) ** -1.5
+        np.testing.assert_allclose(np.asarray(g), want, rtol=1e-5,
+                                   err_msg=mode)
+
+
+def test_rsqrt_subnormal_primal_exact_with_finite_grad():
+    """The custom_jvp port (ROADMAP open item): a subnormal primal stays
+    bit-exact under the gradual policy while the gradient lane (whose
+    analytic -r^3/2 overflows f32) degrades to zero — never nan, and never
+    a flushed primal."""
+    x = jnp.asarray([2.0 ** -130, 2.0 ** -140, 2.0 ** -149], jnp.float32)
+    cfg = dm.DivisionConfig(mode="taylor")
+    r, vjp = jax.vjp(lambda v: dm.rsqrt(v, cfg), x)
+    exact = 1.0 / np.sqrt(np.asarray(x, np.float64))
+    errs = ulp.ulp_error(np.asarray(r), exact)
+    assert errs.max() <= 1.0                       # primal exact-as-gated
+    (g,) = vjp(jnp.ones_like(r))
+    assert bool(jnp.all(jnp.isfinite(g)))          # masked, not nan/inf
+    # forward mode must work too (custom_jvp, not custom_vjp)
+    _, t = jax.jvp(lambda v: dm.rsqrt(v, cfg), (x,), (jnp.ones_like(x),))
+    assert bool(jnp.all(jnp.isfinite(t)))
+
+
+def test_rsqrt_grad_through_fused_kernel_edges():
+    """Kernel rsqrt gradients at IEEE edges are masked to zero, not nan."""
+    from repro.kernels import ops as kops
+
+    x = jnp.asarray([4.0, 0.0, np.inf, 2.0 ** -130], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(jnp.where(jnp.isfinite(
+        kops.tsdiv_rsqrt(v)), kops.tsdiv_rsqrt(v), 0.0)))(x)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert abs(float(g[0]) + 0.5 * 4.0 ** -1.5) < 1e-6
+
+
+# ------------------------------------------------- fused rsqrt kernel twin
+
+def test_fused_rsqrt_bit_identical_to_ftz_twin():
+    """The fused kernel and the underflow="ftz" jnp twin are one datapath,
+    field for field — subnormal operands and IEEE edges included."""
+    from repro.core import taylor
+    from repro.core.seeds import rsqrt_seed_table
+    from repro.kernels import ops as kops
+
+    x = np.concatenate([
+        np.abs(ulp.sweep_logspace(2048, "float32", 20)),
+        ulp.sweep_rsqrt_mantissa(1024, "float32", 21),
+        ulp.sweep_edges("float32"),
+        ulp.sweep_subnormals(256, "float32", 22),
+    ]).astype(np.float32)
+    k = np.asarray(kops.tsdiv_rsqrt(jnp.asarray(x)))
+    t = np.asarray(taylor.rsqrt(jnp.asarray(x), rsqrt_seed_table(16),
+                                newton_iters=2, underflow="ftz"))
+    d = ulp.ulp_diff(k, t)
+    assert int(d.max()) == 0, (int(d.max()), int((d > 0).sum()))
+
+
+def test_fused_rsqrt_bf16_passthrough():
+    from repro.kernels import ops as kops
+
+    x = jnp.asarray(np.linspace(0.5, 8.0, 64), jnp.bfloat16)
+    r = kops.tsdiv_rsqrt(x)
+    assert r.dtype == jnp.bfloat16
+    rel = np.abs(np.asarray(r, np.float32)
+                 * np.sqrt(np.asarray(x, np.float32)) - 1)
+    assert rel.max() < 0.01

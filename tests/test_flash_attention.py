@@ -75,3 +75,61 @@ def test_flash_long_context_streaming(rng):
     e = ref.flash_attention_exact(q, k, v)
     np.testing.assert_allclose(np.asarray(o), np.asarray(e),
                                atol=5e-6, rtol=1e-4)
+
+
+RAGGED_CASES = [
+    # (bh, s, hd, block_q, block_k, causal): seq lens that are NOT block
+    # multiples — the shapes the kernel used to hard-assert on.
+    (2, 100, 32, 32, 32, True),
+    (2, 100, 32, 32, 32, False),
+    (1, 300, 16, 128, 64, True),
+    (3, 77, 32, 32, 16, False),
+]
+
+
+@pytest.mark.parametrize("bh,s,hd,bq,bk,causal", RAGGED_CASES)
+def test_flash_ragged_seq_lens(rng, bh, s, hd, bq, bk, causal):
+    """Pad-and-mask in the ops wrapper: ragged sequences match the oracle
+    (padded keys masked to NEG_INF in-kernel, padded q rows sliced off)."""
+    q = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    assert o.shape == (bh, s, hd)
+    e = ref.flash_attention_exact(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(e),
+                               atol=5e-6, rtol=1e-4)
+    assert np.all(np.isfinite(np.asarray(o)))
+
+
+def test_flash_causal_skip_bit_identity(rng):
+    """The above-diagonal early skip (pl.when on fully-masked k blocks) is
+    bit-identical to running them: a skipped block contributes exactly
+    p = exp(NEG_INF - m_prev) = 0."""
+    from repro.kernels import flash_attention as fak
+
+    q = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
+    for bq, bk in [(64, 32), (32, 64), (128, 128)]:
+        o_skip = fak.flash_attention(q, k, v, causal=True, block_q=bq,
+                                     block_k=bk, skip_masked_k=True)
+        o_full = fak.flash_attention(q, k, v, causal=True, block_q=bq,
+                                     block_k=bk, skip_masked_k=False)
+        assert bool(jnp.all(o_skip == o_full)), (bq, bk)
+
+
+def test_flash_goldschmidt_schedule(rng):
+    """schedule="goldschmidt" runs the joint residual recurrence in-kernel
+    for the 1/l normalization — same oracle tolerance as factored."""
+    q = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+    o = ops.flash_attention(q, k, v, schedule="goldschmidt")
+    e = ref.flash_attention_exact(q, k, v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(e),
+                               atol=3e-6, rtol=1e-4)
+    # and it is genuinely a different reciprocal path than factored: the
+    # two schedules round differently on a fraction of lanes
+    of = ops.flash_attention(q, k, v, schedule="factored")
+    assert bool(jnp.any(o != of))
