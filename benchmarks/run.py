@@ -28,7 +28,7 @@ QUICK = False
 
 _BENCH_DIV = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_div.json")
-_BENCH_DIV_KEYS = ("workloads", "tiled_divide", "consumers")
+_BENCH_DIV_KEYS = ("workloads", "tiled_divide", "consumers", "serving")
 
 
 def _write_bench_div():
@@ -493,6 +493,70 @@ def bench_consumers():
     _write_bench_div()
 
 
+def bench_serving():
+    """Serving trajectory: prefill ms + decode tokens/sec through the engine.
+
+    paper_fpdiv smoke LM, batch x division mode (taylor factored n=2,
+    goldschmidt, taylor_pallas, exact). Prefill and decode are the engine's
+    own jit'd steps (compiled-exec timings, post-warmup) over unequal-length
+    prompts, so the padded-prompt masking path is what gets timed — merged
+    into BENCH_div.json as the ``serving`` section. The taylor_pallas rows
+    run interpret-mode off-TPU (meta.pallas_interpret): functional proxies.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core.division_modes import DivisionConfig
+    from repro.models import init_params
+    from repro.serving import ServingEngine, pad_cache_to
+
+    cfg0 = get_smoke_config("paper_fpdiv")
+    params = init_params(cfg0, jax.random.PRNGKey(0))
+    prompt_len = 16 if QUICK else 32
+    max_new = 8 if QUICK else 16
+    batches = [1, 8]
+    modes = _workload_modes() + [
+        ("taylor_pallas_n2", DivisionConfig(mode="taylor_pallas", n_iters=2)),
+    ]
+    reps, warmup = (2, 1) if QUICK else (5, 2)
+    rows = {}
+    for B in batches:
+        # unequal lengths exercise the padded-prompt masking path
+        lens = [max(4, prompt_len - 3 * i) for i in range(B)]
+        prompts = [list(range(1, L + 1)) for L in lens]
+        cell = {}
+        for name, div in modes:
+            eng = ServingEngine(cfg0, params, division=div,
+                                max_len=prompt_len + max_new + 16)
+            pad_to = eng._pad_to(max(lens))
+            toks = np.zeros((B, pad_to), np.int32)
+            for i, p in enumerate(prompts):
+                toks[i, :len(p)] = p
+            toks = jnp.asarray(toks)
+            lengths = jnp.asarray(lens, jnp.int32)
+            us_pre = _time_us(lambda: eng._prefill_tok(toks, lengths)[0],
+                              reps=reps, warmup=warmup)
+            last, cache = eng._prefill_tok(toks, lengths)
+            cache = pad_cache_to(cache, pad_to, eng.max_len, eng.cfg)
+            tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            us_dec = _time_us(lambda: eng._decode(cache, tok, lengths)[0],
+                              reps=reps * max_new, warmup=warmup)
+            cell[name] = {
+                "prefill_ms": us_pre / 1e3,
+                "decode_us_per_step": us_dec,
+                "decode_tok_s": B / (us_dec * 1e-6),
+            }
+            print(f"serving_{name}_b{B},{us_dec:.1f},"
+                  f"prefill={us_pre / 1e3:.2f}ms;"
+                  f"tok_s={cell[name]['decode_tok_s']:.1f}")
+        rows[f"batch{B}"] = cell
+    rows["config"] = {"arch": cfg0.name, "prompt_len": prompt_len,
+                      "prompt_lens": "unequal (padded-prompt path)",
+                      "max_new": max_new}
+    RESULTS["serving"] = rows
+    _write_bench_div()
+
+
 BENCHES = {
     "segments_table": bench_segments_table,
     "taylor_iters": bench_taylor_iters,
@@ -505,6 +569,7 @@ BENCHES = {
     "workloads": bench_workloads,
     "tiled_divide": bench_tiled_divide,
     "consumers": bench_consumers,
+    "serving": bench_serving,
 }
 
 

@@ -175,38 +175,64 @@ def abstract_cache_attn(cfg: ModelConfig, batch: int, max_len: int, window: int 
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
+def decode_positions(pos, batch: int):
+    """Normalize decode ``pos`` to a (batch,) int32 vector.
+
+    Accepts the legacy scalar (all requests at the same position) or a
+    per-request (batch,) vector — the serving engine's padded-prompt fix:
+    request i's tokens live at absolute positions 0..pos_i, so each slot
+    writes, ropes, and masks at its own position.
+    """
+    pos_v = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,))
+    if pos_v.shape[0] == 1:
+        pos_v = jnp.broadcast_to(pos_v, (batch,))
+    return pos_v
+
+
 def decode_attention(p, x, cache, pos, cfg: ModelConfig, *, window: int = 0,
                      kv_override: Optional[Tuple] = None):
-    """One-token decode. x: (b, 1, d); cache k/v: (b, L, kv, hd); pos: scalar.
+    """One-token decode. x: (b, 1, d); cache k/v: (b, L, kv, hd); pos: scalar
+    or per-request (b,) vector of absolute positions.
 
     Full-attention layers index the cache at pos; sliding-window layers treat
     the cache as a ring buffer of size W (softmax is permutation-invariant, so
-    ring order needs no unrotation).
+    ring order needs no unrotation). With a per-request pos vector each
+    request writes its own slot, and the validity mask excludes every cache
+    slot the request has not written/prefilled — in a padded batch the pad
+    slots at positions >= len(prompt_i) are never attended (they sit above
+    pos_i until the request's own generated tokens overwrite them).
     """
     b, one, d = x.shape
     div = cfg.division
     scale = 1.0 / math.sqrt(cfg.head_dim)
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    posv = jnp.full((b, 1), pos, jnp.int32)
     if kv_override is not None:
         k_all = _repeat_kv(kv_override[0], cfg.q_per_kv)
         v_all = _repeat_kv(kv_override[1], cfg.q_per_kv)
         mask = jnp.ones((1, 1, 1, 1), bool)
         out = _sdpa(q, k_all, v_all, mask, div, scale)
         return jnp.einsum("bqhk,hkd->bqd", out, p["wo"]), cache
+    pos_v = decode_positions(pos, b)
+    posv = pos_v[:, None]
     q = rope_apply(q, posv, cfg)
     k_new = rope_apply(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), posv, cfg)
     v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     L = cache["k"].shape[1]
-    slot = jnp.mod(pos, L) if window > 0 else pos
-    k_c = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                       (0, slot, 0, 0))
-    v_c = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                       (0, slot, 0, 0))
+    slot_v = jnp.mod(pos_v, L) if window > 0 else pos_v
+    bidx = jnp.arange(b)
+    k_c = cache["k"].at[bidx, slot_v].set(k_new[:, 0].astype(cache["k"].dtype))
+    v_c = cache["v"].at[bidx, slot_v].set(v_new[:, 0].astype(cache["v"].dtype))
     k_all = _repeat_kv(k_c, cfg.q_per_kv)
     v_all = _repeat_kv(v_c, cfg.q_per_kv)
     idx = jnp.arange(L)
-    valid = idx <= pos if window == 0 else idx < jnp.minimum(pos + 1, L)
-    mask = valid[None, None, None, :]
+    if window == 0:
+        valid = idx[None, :] <= pos_v[:, None]
+    else:
+        # Ring invariant: slot j holds the latest position p <= pos_i with
+        # p % W == j (prefill builds rings the same way). held < 0 marks a
+        # slot whose position would predate the sequence — never written.
+        held = pos_v[:, None] - jnp.mod(pos_v[:, None] - idx[None, :], L)
+        valid = held >= 0
+    mask = valid[:, None, None, :]
     out = _sdpa(q, k_all, v_all, mask, div, scale)
     return jnp.einsum("bqhk,hkd->bqd", out, p["wo"]), {"k": k_c, "v": v_c}

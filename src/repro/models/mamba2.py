@@ -41,8 +41,13 @@ def _segsum_decay(a):
 
 
 def mamba_mixer(p: Dict, x, cfg: ModelConfig, *, initial_state=None,
-                return_state: bool = False):
-    """x: (b, l, d_model) -> (b, l, d_model). Chunked SSD over cfg.ssm_chunk."""
+                return_state: bool = False, lengths=None):
+    """x: (b, l, d_model) -> (b, l, d_model). Chunked SSD over cfg.ssm_chunk.
+
+    ``lengths`` (per-request real lengths of a right-padded batch) zeroes dt
+    at pad positions, so decay = exp(0*A) = 1 and input contribution dt*B*x = 0
+    there: the returned state equals the state after each row's real tokens.
+    """
     b, l, _ = x.shape
     h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     q = min(cfg.ssm_chunk, l)
@@ -63,6 +68,9 @@ def mamba_mixer(p: Dict, x, cfg: ModelConfig, *, initial_state=None,
     Cc = jax.nn.silu(Cc)
 
     dt = jax.nn.softplus(dt_raw + p["dt_bias"].astype(jnp.float32))  # (b,l,h)
+    if lengths is not None:
+        tmask = jnp.arange(l)[None, :] < lengths[:, None]            # (b,l)
+        dt = dt * tmask[:, :, None]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))                     # (h,)
     xh = xs.reshape(b, l, h, pdim)                                   # heads split
 
@@ -113,11 +121,22 @@ def mamba_mixer(p: Dict, x, cfg: ModelConfig, *, initial_state=None,
     out = jnp.einsum("bli,id->bld", y, p["wout"])
     if return_state:
         wm1 = cfg.conv_width - 1
+
+        def tail(u):
+            if lengths is None:
+                return u[:, -wm1:]
+            # last wm1 REAL positions per row; pos < 0 (prompt shorter than
+            # the conv window) matches the zero-initialized decode conv state.
+            tpos = lengths[:, None] - wm1 + jnp.arange(wm1)[None, :]
+            ok = (tpos >= 0)[:, :, None]
+            g = jnp.take_along_axis(u, jnp.maximum(tpos, 0)[:, :, None], axis=1)
+            return jnp.where(ok, g, 0).astype(u.dtype)
+
         new_cache = {
             "state": S_last,
-            "conv_x": xs_raw[:, -wm1:].astype(jnp.float32).astype(xs_raw.dtype),
-            "conv_B": B_raw[:, -wm1:],
-            "conv_C": C_raw[:, -wm1:],
+            "conv_x": tail(xs_raw).astype(jnp.float32).astype(xs_raw.dtype),
+            "conv_B": tail(B_raw),
+            "conv_C": tail(C_raw),
         }
         return out, new_cache
     return out

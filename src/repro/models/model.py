@@ -38,24 +38,45 @@ def _kv_for_cache(p, x, positions, cfg: ModelConfig):
     return k, v
 
 
-def _ring_from_prefill(k, window: int):
-    """Arrange the last `window` entries into ring order slot = pos % window."""
+def _ring_from_prefill(k, window: int, lengths=None):
+    """Arrange the last `window` entries into ring order slot = pos % window.
+
+    With per-request ``lengths`` (padded-prompt serving), each row's ring
+    holds its last ``window`` REAL positions (lengths[i]-window .. lengths[i]-1)
+    so right-pad tokens never enter the sliding-window cache; positions < 0
+    (prompt shorter than the window) leave zero slots that decode's validity
+    mask excludes.
+    """
     b, s = k.shape[0], k.shape[1]
-    if s <= window:
-        pad = [(0, 0)] * k.ndim
-        pad[1] = (0, window - s)
-        return jnp.pad(k, pad)
-    last = k[:, -window:]
-    slots = jnp.mod(jnp.arange(s - window, s), window)
+    if lengths is None:
+        if s <= window:
+            pad = [(0, 0)] * k.ndim
+            pad[1] = (0, window - s)
+            return jnp.pad(k, pad)
+        last = k[:, -window:]
+        slots = jnp.mod(jnp.arange(s - window, s), window)
+        ring = jnp.zeros((b, window, *k.shape[2:]), k.dtype)
+        return ring.at[:, slots].set(last)
+    pos = lengths[:, None] - window + jnp.arange(window)[None, :]     # (b, W)
+    ok = (pos >= 0)[:, :, None, None]
+    gathered = jnp.take_along_axis(k, jnp.maximum(pos, 0)[:, :, None, None],
+                                   axis=1)
+    gathered = jnp.where(ok, gathered, 0)
+    # pos covers window consecutive ints per row, so mod is a bijection onto
+    # slots — invalid (negative) entries land on slots no valid entry claims.
+    slot = jnp.mod(pos, window)
     ring = jnp.zeros((b, window, *k.shape[2:]), k.dtype)
-    return ring.at[:, slots].set(last)
+    return ring.at[jnp.arange(b)[:, None], slot].set(gathered)
 
 
 # --------------------------------------------------------------- block fwd
 
 def block_forward(bp: Dict, x, spec: LayerSpec, cfg: ModelConfig, positions,
-                  *, mode: str, cache=None, pos=None, enc_out=None):
-    """Returns (x, new_cache, aux)."""
+                  *, mode: str, cache=None, pos=None, enc_out=None,
+                  lengths=None):
+    """Returns (x, new_cache, aux). ``lengths`` (prefill only): per-request
+    real prompt lengths of a right-padded batch — pad positions become SSM
+    no-ops and are excluded from sliding-window rings."""
     div = cfg.division
     aux = jnp.float32(0.0)
     new_cache: Dict[str, Any] = {}
@@ -65,7 +86,9 @@ def block_forward(bp: Dict, x, spec: LayerSpec, cfg: ModelConfig, positions,
         if mode == "decode":
             mh, new_cache["mamba"] = decode_mamba(bp["mamba"], h, cache["mamba"], cfg)
         elif mode == "prefill":
-            mh, new_cache["mamba"] = mamba_mixer(bp["mamba"], h, cfg, return_state=True)
+            mh, new_cache["mamba"] = mamba_mixer(bp["mamba"], h, cfg,
+                                                 return_state=True,
+                                                 lengths=lengths)
         else:
             mh = mamba_mixer(bp["mamba"], h, cfg)
         x = x + mh
@@ -80,7 +103,8 @@ def block_forward(bp: Dict, x, spec: LayerSpec, cfg: ModelConfig, positions,
             if mode == "prefill":
                 k, v = _kv_for_cache(bp["attn"], h, positions, cfg)
                 if window:
-                    k, v = _ring_from_prefill(k, window), _ring_from_prefill(v, window)
+                    k = _ring_from_prefill(k, window, lengths)
+                    v = _ring_from_prefill(v, window, lengths)
                 new_cache["attn"] = {"k": k.astype(cfg.param_dtype),
                                      "v": v.astype(cfg.param_dtype)}
         x = x + ah
@@ -116,7 +140,7 @@ def block_forward(bp: Dict, x, spec: LayerSpec, cfg: ModelConfig, positions,
 
 def _group_forward(gparams, group: Group, x, cfg: ModelConfig, positions, *,
                    mode: str, gcache=None, pos=None, enc_out=None,
-                   specs_override=None):
+                   specs_override=None, lengths=None):
     specs = specs_override or group.period
 
     def body_fn(carry, scanned):
@@ -131,7 +155,7 @@ def _group_forward(gparams, group: Group, x, cfg: ModelConfig, positions, *,
             cache_i = lc["layers"][i] if lc is not None else None
             xc, nc, a = block_forward(lp["layers"][i], xc, spec, cfg, positions,
                                       mode=mode, cache=cache_i, pos=pos,
-                                      enc_out=enc_out)
+                                      enc_out=enc_out, lengths=lengths)
             if seq_shard is not None:
                 # Megatron-SP: keep the residual stream sequence-sharded over
                 # the model axis between blocks; GSPMD turns the TP all-reduce
@@ -184,9 +208,16 @@ def encode(cfg: ModelConfig, enc_params, enc_embeds):
 # ------------------------------------------------------------------ forward
 
 def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None, cache=None,
-            pos=None, mode: str = "train", enc_embeds=None):
+            pos=None, mode: str = "train", enc_embeds=None, lengths=None):
     """Returns (logits, new_cache, aux). ``cache``/``pos`` for decode;
-    ``enc_embeds`` for enc-dec / stub-frontend archs."""
+    ``enc_embeds`` for enc-dec / stub-frontend archs.
+
+    ``pos`` (decode) may be a scalar or a per-request (b,) vector — the
+    serving engine's padded-prompt fix decodes each request at its own
+    absolute position. ``lengths`` (prefill) marks per-request real prompt
+    lengths of a right-padded batch: pad positions become SSM no-ops and are
+    excluded from sliding-window ring caches.
+    """
     enc_out = None
     if cfg.is_encoder_decoder and mode != "decode":
         enc_out = encode(cfg, params["encoder"], enc_embeds)
@@ -199,9 +230,14 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None, cache=None,
         b, s = tokens.shape
 
     if mode == "decode":
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        from .attention import decode_positions
+        pos = decode_positions(pos, b)
+        positions = pos[:, None]
+        lengths = None
     else:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if lengths is not None:
+            lengths = jnp.asarray(lengths, jnp.int32)
 
     aux_total = jnp.float32(0.0)
     new_groups: List[Any] = []
@@ -210,7 +246,7 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None, cache=None,
         gcache = cache["groups"][gi] if cache is not None else None
         x, gc, aux = _group_forward(gparams, group, x, cfg, positions,
                                     mode=mode, gcache=gcache, pos=pos,
-                                    enc_out=enc_out)
+                                    enc_out=enc_out, lengths=lengths)
         new_groups.append(gc)
         aux_total = aux_total + aux
 

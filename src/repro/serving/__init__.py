@@ -1,3 +1,5 @@
-from .engine import ServingEngine, decode_step, pad_cache_to, prefill
+from .engine import (Request, ServingEngine, decode_step, pad_cache_to,
+                     prefill)
 
-__all__ = ["ServingEngine", "decode_step", "pad_cache_to", "prefill"]
+__all__ = ["Request", "ServingEngine", "decode_step", "pad_cache_to",
+           "prefill"]

@@ -8,7 +8,13 @@
   (c) every public op (recip / div / rsqrt / softmax) accepts empty,
       rank-0, and bf16 scalar operands in every mode without crashing —
       extending the PR 3 empty-operand fix beyond divide.
+  (d) ``repro.launch.serve`` routes ``--batch`` through the batched path,
+      honours the division-mode flags, and rejects unknown modes.
 """
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
@@ -16,6 +22,13 @@ import jax.numpy as jnp
 
 from repro.core import division_modes as dm
 from repro.eval import conformance, golden
+
+
+def _run_cli(args, timeout=600):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", *args],
+        capture_output=True, text=True, timeout=timeout,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd="/root/repo")
 
 
 # ------------------------------------------------------------- exit codes
@@ -83,6 +96,35 @@ def test_golden_store_choices_include_rsqrt(capsys):
     with pytest.raises(SystemExit):
         golden.main(["--check", "--store", "bogus"])
     capsys.readouterr()
+
+
+# ------------------------------------------------------------- serve CLI
+
+def test_serve_cli_single_path():
+    r = _run_cli(["--arch", "paper_fpdiv", "--smoke", "--batch", "1",
+                  "--prompt-len", "12", "--max-new", "4"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "generated 4 tokens" in r.stdout
+    assert "tok/s" in r.stdout
+    assert "division=taylor" in r.stdout  # config default
+
+
+def test_serve_cli_batched_with_division_flags():
+    r = _run_cli(["--arch", "paper_fpdiv", "--smoke", "--batch", "3",
+                  "--prompt-len", "14", "--max-new", "4",
+                  "--division-mode", "goldschmidt", "--n-iters", "3",
+                  "--schedule", "factored"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "division=goldschmidt" in r.stdout
+    assert "n_iters=3" in r.stdout
+    assert r.stdout.count("generated 4 tokens") == 3  # the batched path ran
+
+
+def test_serve_cli_rejects_unknown_mode():
+    r = _run_cli(["--arch", "paper_fpdiv", "--smoke",
+                  "--division-mode", "bogus"], timeout=120)
+    assert r.returncode != 0
+    assert "invalid choice" in r.stderr
 
 
 # ---------------------------------------------- degenerate-operand matrix

@@ -12,8 +12,9 @@ import jax.numpy as jnp
 import jax.tree_util as jtu
 
 from repro.configs import get_smoke_config
+from repro.core.division_modes import DivisionConfig
 from repro.models import forward, init_params
-from repro.serving import pad_cache_to
+from repro.serving import ServingEngine, pad_cache_to
 
 ARCHS = ["llama3_8b", "gemma3_12b", "mamba2_780m", "jamba_1_5_large",
          "whisper_tiny", "deepseek_moe_16b", "llava_next_mistral_7b"]
@@ -59,6 +60,95 @@ def test_prefill_decode_matches_full(arch):
         errs.append(float(jnp.max(jnp.abs(dl[:, 0] - full_logits[:, S + t]))))
     scale = float(jnp.max(jnp.abs(full_logits)))
     assert max(errs) / scale < 3e-4, f"{arch}: rel err {max(errs)/scale}"
+
+
+# ------------------------------------------------ mode-parameterized gates
+
+@pytest.mark.parametrize("mode", ["taylor", "goldschmidt", "taylor_pallas"])
+def test_prefill_decode_matches_full_under_mode(mode):
+    """The prefill+decode==full gate holds under every division mode the
+    serving knob exposes, not just the config default. gemma3 exercises both
+    decode cache paths (swa ring + global KV) through the mode's softmax and
+    rmsnorm."""
+    cfg = dataclasses.replace(
+        get_smoke_config("gemma3_12b"), param_dtype="float32",
+        division=DivisionConfig(mode=mode, n_iters=2))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S, EXTRA = 2, 32, 4
+    total = S + 16
+    toks = jax.random.randint(key, (B, total), 0, cfg.vocab)
+    full_logits, _, _ = forward(cfg, params, tokens=toks, mode="train")
+    _, cache, _ = forward(cfg, params, tokens=toks[:, :S], mode="prefill")
+    cache = pad_cache_to(cache, S, total, cfg)
+    errs = []
+    for t in range(EXTRA):
+        dl, cache, _ = forward(cfg, params, tokens=toks[:, S + t:S + t + 1],
+                               cache=cache, pos=S + t, mode="decode")
+        errs.append(float(jnp.max(jnp.abs(dl[:, 0] - full_logits[:, S + t]))))
+    scale = float(jnp.max(jnp.abs(full_logits)))
+    assert max(errs) / scale < 3e-4, f"{mode}: rel err {max(errs)/scale}"
+
+
+# --------------------------------------- serving mode-equivalence (vs EXACT)
+
+def _replay(engine, prompts, steps, teacher=None):
+    """Greedy decode through the engine's own jit'd steps. With ``teacher``
+    (the EXACT run's chosen tokens), feed that stream instead of the
+    engine's own argmax so the two runs see identical context at every step
+    (no divergence feedback). Returns (argmaxes (steps, B), logits
+    (steps, B, V))."""
+    lens = [len(p) for p in prompts]
+    B = len(prompts)
+    pad_to = engine._pad_to(max(lens))
+    toks = np.zeros((B, pad_to), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    lengths = jnp.asarray(lens, jnp.int32)
+    logits, cache = engine._prefill_tok(jnp.asarray(toks), lengths)
+    cache = pad_cache_to(cache, pad_to, engine.max_len, engine.cfg)
+    pos = lengths
+    argmaxes, logit_seq = [], []
+    for t in range(steps):
+        logit_seq.append(np.asarray(logits))
+        choice = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        argmaxes.append(np.asarray(choice[:, 0]))
+        feed = choice if teacher is None else jnp.asarray(
+            teacher[t])[:, None].astype(jnp.int32)
+        logits, cache = engine._decode(cache, feed, pos)
+        pos = pos + 1
+    return np.stack(argmaxes), np.stack(logit_seq)
+
+
+NON_ILM = ["taylor", "taylor_pallas", "goldschmidt", "goldschmidt_pallas"]
+
+
+@pytest.mark.parametrize("arch,modes", [
+    ("paper_fpdiv", NON_ILM),          # the paper's own config: every mode
+    ("gemma3_12b", ["taylor"]),        # attention smoke (swa ring + global)
+    ("jamba_1_5_large", ["goldschmidt"]),  # hybrid smoke (SSM + MoE + attn)
+])
+def test_serving_mode_equivalence_vs_exact(arch, modes):
+    """Every non-ILM division mode, run as the serving knob, tracks the
+    cfg=EXACT twin: >= 99% greedy-token agreement under teacher forcing and
+    bounded logit drift."""
+    cfg = dataclasses.replace(get_smoke_config(arch), param_dtype="float32",
+                              capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    steps = 50 if arch == "paper_fpdiv" else 24
+    prompts = [list(range(1, 14)), list(range(3, 20))]
+    exact_eng = ServingEngine(cfg, params, max_len=96,
+                              division=DivisionConfig(mode="exact"))
+    teacher, exact_logits = _replay(exact_eng, prompts, steps)
+    scale = float(np.max(np.abs(exact_logits)))
+    for mode in modes:
+        eng = ServingEngine(cfg, params, max_len=96,
+                            division=DivisionConfig(mode=mode, n_iters=2))
+        am, lg = _replay(eng, prompts, steps, teacher=teacher)
+        agreement = float(np.mean(am == teacher))
+        drift = float(np.max(np.abs(lg - exact_logits))) / scale
+        assert agreement >= 0.99, f"{arch}/{mode}: agreement {agreement}"
+        assert drift < 5e-3, f"{arch}/{mode}: logit drift {drift}"
 
 
 def test_swa_ring_cache_wraps():
