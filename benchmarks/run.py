@@ -28,7 +28,8 @@ QUICK = False
 
 _BENCH_DIV = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_div.json")
-_BENCH_DIV_KEYS = ("workloads", "tiled_divide", "consumers", "serving")
+_BENCH_DIV_KEYS = ("workloads", "tiled_divide", "consumers", "serving",
+                   "sharding")
 
 
 def _write_bench_div():
@@ -557,6 +558,60 @@ def bench_serving():
     _write_bench_div()
 
 
+def bench_sharding():
+    """Mesh scaling: 1 vs 8 virtual devices, tiled divide + K-Means.
+
+    jax locks the device count at first init, so each point runs as a
+    subprocess (``repro.sharding.scaling``) under its own
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. At N=1 the
+    mesh-aware dispatch falls back to the single-device paths, so the pair
+    is a true sharded-vs-unsharded comparison — on this container all 8
+    virtual devices share one host CPU, so the speedup column measures
+    dispatch overhead and XLA's intra-host parallelism, not an 8x fleet
+    (recorded as-is in the ``sharding`` section of BENCH_div.json).
+    """
+    import subprocess
+    import sys
+
+    src = os.path.abspath(os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
+    points = 200_000 if QUICK else 1_000_000
+    rows_, cols = (1024, 256) if QUICK else (2048, 384)
+    reps = 2 if QUICK else 3
+    rows = {}
+    for n_dev in (1, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        cmd = [sys.executable, "-m", "repro.sharding.scaling",
+               "--points", str(points), "--rows", str(rows_),
+               "--cols", str(cols), "--reps", str(reps)]
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=1800)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"scaling driver failed at {n_dev} device(s):\n"
+                f"{proc.stdout}\n{proc.stderr}")
+        data = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows[f"devices{n_dev}"] = data
+        print(f"sharding_divide_d{n_dev},{data['tiled_divide_us']:.1f},"
+              f"shape={rows_}x{cols}")
+        print(f"sharding_kmeans_d{n_dev},{data['kmeans_us']:.1f},"
+              f"points={points};inertia={data['kmeans']['inertia']:.6f}")
+    rows["speedup_8dev"] = {
+        "tiled_divide": rows["devices1"]["tiled_divide_us"]
+        / rows["devices8"]["tiled_divide_us"],
+        "kmeans": rows["devices1"]["kmeans_us"]
+        / rows["devices8"]["kmeans_us"],
+    }
+    print(f"sharding_speedup,0,"
+          f"divide={rows['speedup_8dev']['tiled_divide']:.2f}x;"
+          f"kmeans={rows['speedup_8dev']['kmeans']:.2f}x")
+    RESULTS["sharding"] = rows
+    _write_bench_div()
+
+
 BENCHES = {
     "segments_table": bench_segments_table,
     "taylor_iters": bench_taylor_iters,
@@ -570,6 +625,7 @@ BENCHES = {
     "tiled_divide": bench_tiled_divide,
     "consumers": bench_consumers,
     "serving": bench_serving,
+    "sharding": bench_sharding,
 }
 
 

@@ -31,6 +31,15 @@ delivered accuracy is gated by the consumer-conformance tier
 
 The delivered accuracy of every mode is measured in ULPs by
 ``repro.eval.conformance`` (``python -m repro.eval.conformance``).
+
+Mesh awareness: the Pallas modes are safe to call on sharded operands. The
+dispatch mechanics live in ``kernels/ops.py`` — when a mesh is registered via
+``repro.sharding.rules.use_mesh``, the rank >= 2 kernel entry points wrap
+their tiled launches in ``shard_map`` over the batch axes so sharded operands
+stay device-resident (a bare ``pallas_call`` under jit would otherwise be
+silently all-gathered, since it is not GSPMD-partitionable). Nothing in this
+module changes per-mode numerics based on the mesh; callers already inside a
+shard_map body use ``rules.suspend_mesh()`` around their division sites.
 """
 from __future__ import annotations
 

@@ -475,6 +475,70 @@ def format_table(report: Dict) -> str:
     return "\n".join(lines)
 
 
+def _emit(report: Dict, json_path: Optional[str]) -> int:
+    """Shared tail of main/fanout: table, optional JSON, pass/fail exit."""
+    print(format_table(report))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {json_path}")
+    failing = [c["key"] for c in report["cells"] if not c.get("pass", True)]
+    if failing:
+        print(f"# CONFORMANCE FAILURES ({len(failing)} cells):")
+        for k in failing:
+            print(f"#   {k}")
+        return 1
+    return 0
+
+
+def _run_fanout(args, n: int) -> int:
+    """Fan the grid out over ``n`` worker subprocesses, one ``--shard i/n``
+    each — the grid is embarrassingly parallel by cell.
+
+    Workers re-derive the same deterministic cell list and take the
+    interleaved slice ``cells[i::n]``, so the merged report
+    (``merged[i::n] = shard_i``) restores the exact single-process cell
+    order. Each worker is its own jax process; on this container they share
+    the host CPU, on a multi-host fleet the same flag pins one shard per
+    process/device. A worker that dies without writing its report fails the
+    whole run.
+    """
+    import os
+    import subprocess
+    import tempfile
+
+    cmd = [sys.executable, "-m", "repro.eval.conformance",
+           "--seed", str(args.seed)]
+    if args.quick:
+        cmd.append("--quick")
+    if args.modes:
+        cmd += ["--modes", args.modes]
+    src_root = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.TemporaryDirectory() as td:
+        paths = [os.path.join(td, f"shard{i}.json") for i in range(n)]
+        procs = [subprocess.Popen(cmd + ["--shard", f"{i}/{n}",
+                                         "--json", paths[i]],
+                                  env=env, stdout=subprocess.DEVNULL)
+                 for i in range(n)]
+        rcs = [p.wait() for p in procs]
+        shards = []
+        for i, path in enumerate(paths):
+            if not os.path.exists(path):
+                print(f"# fanout shard {i}/{n} wrote no report "
+                      f"(exit {rcs[i]})")
+                return 1
+            with open(path) as f:
+                shards.append(json.load(f))
+    merged: List = [None] * sum(len(s["cells"]) for s in shards)
+    for i, s in enumerate(shards):
+        merged[i::n] = s["cells"]
+    report = {"meta": {**shards[0]["meta"], "fanout": n}, "cells": merged}
+    return _emit(report, args.json)
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
@@ -484,7 +548,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--modes", default=None,
                     help="comma-separated mode filter (e.g. taylor,goldschmidt)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shard", default=None, metavar="K/N",
+                    help="run only the interleaved grid slice cells[K::N]")
+    ap.add_argument("--fanout", type=int, default=0, metavar="N",
+                    help="fan the grid out over N --shard subprocesses and "
+                         "merge their reports")
     args = ap.parse_args(argv)
+    if args.fanout and args.shard:
+        ap.error("--fanout and --shard are mutually exclusive")
+    if args.fanout and args.fanout > 1:
+        return _run_fanout(args, args.fanout)
 
     cells = default_grid(quick=args.quick)
     if args.modes:
@@ -495,19 +568,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         if unknown:
             ap.error(f"unknown modes {sorted(unknown)}; valid: {MODES}")
         cells = [c for c in cells if c.mode in keep]
+    if args.shard:
+        try:
+            k, n = (int(p) for p in args.shard.split("/"))
+        except ValueError:
+            ap.error("--shard wants K/N (e.g. 0/8)")
+        if not 0 <= k < n:
+            ap.error(f"--shard needs 0 <= K < N, got {args.shard}")
+        cells = cells[k::n]
     report = run_conformance(cells, quick=args.quick, seed=args.seed)
-    print(format_table(report))
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"# wrote {args.json}")
-    failing = [c["key"] for c in report["cells"] if not c.get("pass", True)]
-    if failing:
-        print(f"# CONFORMANCE FAILURES ({len(failing)} cells):")
-        for k in failing:
-            print(f"#   {k}")
-        return 1
-    return 0
+    return _emit(report, args.json)
 
 
 if __name__ == "__main__":

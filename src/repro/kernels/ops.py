@@ -4,6 +4,18 @@ Arbitrary-rank inputs are reshaped/padded to the 2D tiled forms the kernels
 expect (lane dim multiple of 128, sublane of 8), then cropped back. These are
 the entry points ``core.division_modes`` uses for mode="taylor_pallas".
 
+Mesh-aware dispatch: a ``pallas_call`` is not GSPMD-partitionable, so under
+plain ``jax.jit`` any sharded operand reaching these wrappers is silently
+all-gathered onto every device before the kernel runs. When a mesh is
+registered (``repro.sharding.rules.use_mesh`` — the launcher does this), the
+rank >= 2 paths instead wrap the tiled kernel launch in ``shard_map`` over
+the batch axes (largest divisible prefix of ('pod','data'), see
+``rules.batch_partition``): each device launches the kernel on its resident
+rows, block specs derive from the *per-shard* shape, and ragged last tiles
+are masked against local extents inside the kernel — no all-gather, no
+resharding. Code already inside a shard_map body disables this with
+``rules.suspend_mesh()``.
+
 On CPU (this container) kernels run with interpret=True; on TPU set
 ``repro.kernels.ops.INTERPRET = False`` (the launcher does this when
 jax.default_backend() == 'tpu').
@@ -53,6 +65,47 @@ def _from_2d(y, n, shape):
     return y.reshape(-1)[:n].reshape(shape)
 
 
+def _row_shard_axes(rows: int):
+    """(mesh, batch_axes) when the active mesh can shard ``rows`` kernel rows.
+
+    None when no mesh is registered (single-device tests/examples run the
+    plain launch unchanged) or when no batch-axis prefix divides the row
+    count (the kernel would need ragged *shard* extents, which shard_map
+    does not express).
+    """
+    from repro.sharding import rules as shr
+
+    mesh = shr.active_mesh()
+    if mesh is None:
+        return None
+    axes = shr.batch_partition(mesh, rows)
+    n = 1
+    for ax in axes:
+        n *= mesh.shape[ax]
+    if n <= 1:
+        return None
+    return mesh, axes
+
+
+def _shard_rows(fn, mesh, axes, n_args: int):
+    """shard_map a row-tiled 2D kernel launch: dim 0 sharded over ``axes``.
+
+    The body receives the per-shard (rows/n, N) block and launches the tiled
+    kernel on it directly — grid and block specs are recomputed from the
+    local shape, so sharded operands stay resident end to end (zero
+    collectives; the conformance for this is pinned in
+    tests/test_sharded_kernels.py). check_rep=False: the elementwise body
+    has no replication for shard_map's checker to track through the
+    pallas_call.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(axes, None)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,) * n_args,
+                     out_specs=spec, check_rep=False)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
 def tsdiv_recip(x, n_iters: int = 2, precision_bits: int = 24,
                 schedule: str = "factored"):
@@ -61,6 +114,22 @@ def tsdiv_recip(x, n_iters: int = 2, precision_bits: int = 24,
     orig_dtype, shape = x.dtype, x.shape
     if x.size == 0:      # no lanes to launch; keep the shape/dtype contract
         return (1.0 / x).astype(orig_dtype)
+    if x.ndim >= 2:
+        info = _row_shard_axes(int(np.prod(shape[:-1])))
+        if info is not None:
+            # Mesh-aware rank >= 2 path: per-shard tiled launches over the
+            # native layout (the flatten-pad layout below would interleave
+            # rows across shard boundaries). Engaged only when sharding
+            # actually applies, so the single-device layout — and its
+            # bit-pinned outputs — never changes.
+            rows = int(np.prod(shape[:-1]))
+            x2 = x.astype(jnp.float32).reshape(rows, shape[-1])
+            y = _shard_rows(
+                lambda xl: tsdiv_k.tsdiv_recip_tiled_2d(
+                    xl, n_iters=n_iters, precision_bits=precision_bits,
+                    schedule=schedule, interpret=INTERPRET),
+                *info, n_args=1)(x2)
+            return y.reshape(shape).astype(orig_dtype)
     x2, n = _to_2d(x.astype(jnp.float32))
     y = tsdiv_k.tsdiv_recip_2d(x2, n_iters=n_iters, precision_bits=precision_bits,
                                schedule=schedule, interpret=INTERPRET)
@@ -109,13 +178,21 @@ def tsdiv_divide(a, b, n_iters: int = 2, precision_bits: int = 24,
         # dims collapse row-major into the sublane axis (a metadata-only
         # reshape, no copy), then a 2D grid with ragged last tiles masked
         # in-kernel — no pad copies on the way in or crop on the way out.
+        # With an active mesh the launch goes through shard_map so sharded
+        # operands stay resident (see module docstring).
         rows = int(np.prod(shape[:-1]))
-        y = tsdiv_k.tsdiv_divide_tiled_2d(
-            a.astype(jnp.float32).reshape(rows, shape[-1]),
-            b.astype(jnp.float32).reshape(rows, shape[-1]),
-            n_iters=n_iters, precision_bits=precision_bits,
-            schedule=schedule, interpret=INTERPRET)
-        return y.reshape(shape).astype(orig_dtype)
+        a2 = a.astype(jnp.float32).reshape(rows, shape[-1])
+        b2 = b.astype(jnp.float32).reshape(rows, shape[-1])
+
+        def launch(al, bl):
+            return tsdiv_k.tsdiv_divide_tiled_2d(
+                al, bl, n_iters=n_iters, precision_bits=precision_bits,
+                schedule=schedule, interpret=INTERPRET)
+
+        info = _row_shard_axes(rows)
+        if info is not None:
+            launch = _shard_rows(launch, *info, n_args=2)
+        return launch(a2, b2).reshape(shape).astype(orig_dtype)
     # Rank 0/1 keeps the flatten-pad path deliberately: a vector laid out as
     # (1, N) in the tiled kernel would occupy one of eight sublanes per tile,
     # while _to_2d packs it (ceil(n/128), 128) at full utilization — the
@@ -136,6 +213,19 @@ def tsdiv_rsqrt(x, newton_iters: int = 2, n_segments: int = 16):
     orig_dtype, shape = x.dtype, x.shape
     if x.size == 0:      # no lanes to launch; keep the shape/dtype contract
         return jax.lax.rsqrt(x.astype(jnp.float32)).astype(orig_dtype)
+    if x.ndim >= 2:
+        info = _row_shard_axes(int(np.prod(shape[:-1])))
+        if info is not None:
+            # Same rationale as tsdiv_recip: shard the native (rows, N)
+            # layout, per-shard tiled launches; only engaged under a mesh.
+            rows = int(np.prod(shape[:-1]))
+            x2 = x.astype(jnp.float32).reshape(rows, shape[-1])
+            y = _shard_rows(
+                lambda xl: tsdiv_k.tsdiv_rsqrt_tiled_2d(
+                    xl, newton_iters=newton_iters, n_segments=n_segments,
+                    interpret=INTERPRET),
+                *info, n_args=1)(x2)
+            return y.reshape(shape).astype(orig_dtype)
     x2, n = _to_2d(x.astype(jnp.float32))
     y = tsdiv_k.tsdiv_rsqrt_2d(x2, newton_iters=newton_iters,
                                n_segments=n_segments, interpret=INTERPRET)

@@ -70,6 +70,31 @@ def _tiled_grid_spec(shape, block):
     return grid, spec, (bm, bn)
 
 
+def _tile_valid_mask(shape, block):
+    """(bm, bn) bool mask of lanes inside the (M, N) array for this tile."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    bm, bn = block
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+    return (rows < shape[0]) & (cols < shape[1])
+
+
+def _recip_tiled_kernel(x_ref, o_ref, *, table: SeedTable, n: int,
+                        schedule: str, shape, block):
+    """Fused reciprocal over one ragged (bm, bn) tile; dead lanes -> 1.0."""
+    valid = _tile_valid_mask(shape, block)
+    x = jnp.where(valid, x_ref[...], jnp.float32(1.0))
+    o_ref[...] = common.recip_f32_bits(x, table, n, schedule)
+
+
+def _rsqrt_tiled_kernel(x_ref, o_ref, *, table: SeedTable, newton_iters: int,
+                        shape, block):
+    """Fused full-edge rsqrt over one ragged (bm, bn) tile; dead lanes -> 1.0."""
+    valid = _tile_valid_mask(shape, block)
+    x = jnp.where(valid, x_ref[...], jnp.float32(1.0))
+    o_ref[...] = common.rsqrt_f32_bits(x, table, newton_iters)
+
+
 def _divide_tiled_kernel(a_ref, b_ref, o_ref, *, table: SeedTable, n: int,
                          schedule: str, shape, block):
     """Fused divide over one (bm, bn) tile of a ragged (M, N) operand pair.
@@ -79,11 +104,7 @@ def _divide_tiled_kernel(a_ref, b_ref, o_ref, *, table: SeedTable, n: int,
     implementation-defined, and while their quotients would be discarded on
     store anyway, masking keeps the kernel deterministic.
     """
-    i, j = pl.program_id(0), pl.program_id(1)
-    bm, bn = block
-    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
-    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
-    valid = (rows < shape[0]) & (cols < shape[1])
+    valid = _tile_valid_mask(shape, block)
     one = jnp.float32(1.0)
     a = jnp.where(valid, a_ref[...], one)
     b = jnp.where(valid, b_ref[...], one)
@@ -184,3 +205,56 @@ def tsdiv_divide_tiled_2d(a, b, *, n_iters: int = 2, precision_bits: int = 24,
         out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
         interpret=interpret,
     )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "precision_bits",
+                                             "schedule", "block", "interpret"))
+def tsdiv_recip_tiled_2d(x, *, n_iters: int = 2, precision_bits: int = 24,
+                         schedule: str = "factored", block=DEFAULT_BLOCK,
+                         interpret: bool = True):
+    """Reciprocal over an arbitrary f32 (M, N) array — the streaming form.
+
+    The unary twin of :func:`tsdiv_divide_tiled_2d`: grid-scheduled over the
+    native layout with ragged last tiles masked in-kernel (dead lanes get the
+    benign operand 1.0). This is what the mesh-aware dispatch launches per
+    shard — the per-shard extents are whatever ``x.shape`` says, so ragged
+    masking is automatically against *local* extents.
+    """
+    table = compute_segments(n_iters, precision_bits)
+    grid, spec, blk = _tiled_grid_spec(x.shape, block)
+    return pl.pallas_call(
+        functools.partial(_recip_tiled_kernel, table=table, n=n_iters,
+                          schedule=schedule, shape=x.shape, block=blk),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("newton_iters", "n_segments",
+                                             "block", "interpret"))
+def tsdiv_rsqrt_tiled_2d(x, *, newton_iters: int = 2, n_segments: int = 16,
+                         block=DEFAULT_BLOCK, interpret: bool = True):
+    """rsqrt over an arbitrary f32 (M, N) array — the streaming form.
+
+    Same full-edge FTZ datapath as :func:`tsdiv_rsqrt_2d` but grid-scheduled
+    directly over the native 2D layout with ragged last tiles masked
+    in-kernel, so per-shard operands of any local extent launch without
+    pre-padding copies. The mesh-aware rank >= 2 path of
+    ``kernels.ops.tsdiv_rsqrt``.
+    """
+    from repro.core.seeds import rsqrt_seed_table
+
+    table = rsqrt_seed_table(n_segments)
+    grid, spec, blk = _tiled_grid_spec(x.shape, block)
+    return pl.pallas_call(
+        functools.partial(_rsqrt_tiled_kernel, table=table,
+                          newton_iters=newton_iters, shape=x.shape, block=blk),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -79,11 +79,10 @@ def _cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
     context, batch=1) shard the KV seq dim over 'data'. Heads/state shard
     over 'model' when divisible."""
     B = shape.global_batch
-    ba = shr.batch_axes(mesh)
-    n_batch = 1
-    for ax in ba:
-        n_batch *= mesh.shape[ax]
-    batch_ok = B % n_batch == 0
+    # Largest divisible prefix of ('pod','data') — not all-or-nothing: a
+    # batch divisible by 'pod' alone still shards over it (rules.py).
+    ba = shr.batch_partition(mesh, B)
+    batch_ok = bool(ba)
     model_n = mesh.shape["model"]
 
     cache = make_cache(cfg, B, shape.seq_len, abstract=True)
@@ -103,7 +102,7 @@ def _cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
             if kv_seq and a.shape[nd - 3] % mesh.shape.get(kv_seq, 1) == 0:
                 # flash-decoding layout: cache sequence over the model axis
                 parts[nd - 3] = kv_seq
-            elif not batch_ok and "data" in mesh.shape \
+            elif "data" not in ba and "data" in mesh.shape \
                     and a.shape[nd - 3] % mesh.shape["data"] == 0:
                 parts[nd - 3] = "data"  # sequence-parallel cache (batch=1)
             if parts[nd - 3] != "model" and a.shape[nd - 2] % model_n == 0:
@@ -316,6 +315,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         "variant": variant,
         "devices": n_dev,
         "n_micro": n_micro,
+        # Every silent spec_for drop, named: a replicated 8B-param tensor
+        # should be a report line, not a surprise OOM (report.py renders).
+        "sharding_fallbacks": shr.param_fallbacks(cfg, mesh),
         "compile_s": t_compile,
         "probe_compile_s": t_probe,
         "memory": {

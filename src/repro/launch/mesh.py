@@ -30,8 +30,22 @@ def make_production_mesh(*, multi_pod: bool = False,
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
-    """Small mesh over whatever devices exist (tests / examples)."""
+    """Small mesh over whatever devices exist (tests / examples).
+
+    Raises ValueError (not a bare assert, which ``python -O`` strips into a
+    garbage-shaped mesh) when ``model`` exceeds or doesn't divide the host's
+    device count.
+    """
     n = jax.device_count()
-    assert n % model == 0
+    if model < 1:
+        raise ValueError(f"model={model} must be >= 1")
+    if model > n:
+        raise ValueError(
+            f"model={model} exceeds the {n} available device(s); force more "
+            "with XLA_FLAGS=--xla_force_host_platform_device_count=N or "
+            "lower the model-parallel degree")
+    if n % model != 0:
+        raise ValueError(
+            f"device count {n} is not divisible by model={model}")
     return jax.make_mesh((n // model, model), ("data", "model"),
                          **_axis_type_kwargs(2))

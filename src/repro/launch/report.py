@@ -49,6 +49,38 @@ def table(cells, mesh="single", variant="base"):
     return "\n".join(out)
 
 
+def fallbacks_section(cells, mesh="single", variant="base"):
+    """Per-cell table of silent sharding drops (rules.param_fallbacks).
+
+    Every (param, dim) whose rule named a mesh axis that was dropped —
+    duplicate use, axis missing, or size not divisible — with the full
+    replicated byte size attached. Empty when every rule resolved.
+    """
+    rows = [c for c in cells
+            if c["mesh"] == mesh and c.get("variant", "base") == variant
+            and c.get("sharding_fallbacks")]
+    if not rows:
+        return ""
+    seen = set()
+    out = ["", "### Sharding fallbacks (replicated despite a rule)", "",
+           "| arch | param | shape | axis -> mesh axis | reason | bytes |",
+           "|---|---|---|---|---|---|"]
+    for c in rows:
+        for fb in c["sharding_fallbacks"]:
+            key = (c["arch"], fb["param"], fb["dim"])
+            if key in seen:     # one line per param/dim, not per shape cell
+                continue
+            seen.add(key)
+            out.append(
+                f"| {c['arch']} | {fb['param']} | "
+                f"{'x'.join(str(s) for s in fb['shape'])} "
+                f"| {fb['logical_axis']} -> {fb['mesh_axis']} "
+                f"(dim {fb['dim']}: {fb['dim_size']} % "
+                f"{fb['mesh_axis_size']}) | {fb['reason']} "
+                f"| {fmt_bytes(fb['bytes'])} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
@@ -57,6 +89,9 @@ def main():
     args = ap.parse_args()
     cells = load_cells(args.dir)
     print(table(cells, args.mesh, args.variant))
+    fb = fallbacks_section(cells, args.mesh, args.variant)
+    if fb:
+        print(fb)
 
 
 if __name__ == "__main__":

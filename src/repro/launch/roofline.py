@@ -149,6 +149,32 @@ def parse_collectives(hlo_text: str, n_devices: int,
             "ici_bytes_tpu": ici_tpu, "dcn_bytes_tpu": dcn_tpu, "ops": ops}
 
 
+def elementwise_hbm_bytes(n_elements: int, *, n_operands: int = 2,
+                          n_results: int = 1, dtype_bytes: int = 4,
+                          n_devices: int = 1) -> float:
+    """Per-device HBM traffic model for an elementwise kernel.
+
+    A fused divide/rsqrt kernel streams each operand in and each result out
+    exactly once; sharded over ``n_devices`` every device touches its
+    resident 1/n slice. The sharded-kernel tests compare this against
+    ``cost_analysis()['bytes accessed']`` to pin that shard_map actually
+    divided the traffic instead of all-gathering it.
+    """
+    return (n_operands + n_results) * n_elements * dtype_bytes / n_devices
+
+
+def allreduce_wire_bytes(n_elements: int, group_size: int,
+                         dtype_bytes: int = 4) -> float:
+    """Ring all-reduce wire bytes per device: 2*(g-1)/g * payload.
+
+    The analytic twin of what :func:`parse_collectives` tallies from HLO —
+    used to validate that e.g. the K-Means psum-of-sums/psum-of-counts
+    collective traffic matches the (K*D + K) payload model.
+    """
+    return _WIRE_FACTOR["all-reduce"](max(group_size, 1)) * \
+        n_elements * dtype_bytes
+
+
 @dataclasses.dataclass
 class Roofline:
     flops: float                # per device

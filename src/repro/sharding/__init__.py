@@ -1,3 +1,7 @@
-from .rules import batch_axes, data_sharding, param_shardings, replicated, spec_for
+from .rules import (active_mesh, batch_axes, batch_partition, data_sharding,
+                    data_spec, param_fallbacks, param_shardings, replicated,
+                    spec_for, suspend_mesh, use_mesh)
 
-__all__ = ["batch_axes", "data_sharding", "param_shardings", "replicated", "spec_for"]
+__all__ = ["active_mesh", "batch_axes", "batch_partition", "data_sharding",
+           "data_spec", "param_fallbacks", "param_shardings", "replicated",
+           "spec_for", "suspend_mesh", "use_mesh"]

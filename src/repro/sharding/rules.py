@@ -21,18 +21,42 @@ from repro.models import params as params_lib
 
 
 def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
-             rules: Dict[str, Optional[str]], mesh: Mesh) -> P:
+             rules: Dict[str, Optional[str]], mesh: Mesh,
+             drops: Optional[list] = None) -> P:
+    """Resolve a param's logical axes to a PartitionSpec.
+
+    ``drops``, when passed, collects one record per *silent fallback*: a dim
+    whose rule named a mesh axis that could not be honored (duplicate use,
+    axis missing from the mesh, or size not divisible). Dims whose rule is
+    None are intended replication, not drops. The dry-run threads these into
+    its per-cell report so a replicated 8B-param tensor is a named line, not
+    a surprise OOM (see launch/dryrun.py).
+    """
     parts = []
     used = set()
-    for size, ax in zip(shape, axes):
+    for dim, (size, ax) in enumerate(zip(shape, axes)):
         mesh_ax = rules.get(ax) if ax is not None else None
-        if (mesh_ax is None or mesh_ax in used
-                or mesh_ax not in mesh.shape
-                or size % mesh.shape[mesh_ax] != 0):
+        if mesh_ax is None:
             parts.append(None)
             continue
-        parts.append(mesh_ax)
-        used.add(mesh_ax)
+        if mesh_ax in used:
+            reason = "duplicate"
+        elif mesh_ax not in mesh.shape:
+            reason = "missing-axis"
+        elif size % mesh.shape[mesh_ax] != 0:
+            reason = "indivisible"
+        else:
+            parts.append(mesh_ax)
+            used.add(mesh_ax)
+            continue
+        if drops is not None:
+            drops.append({
+                "dim": dim, "logical_axis": ax, "mesh_axis": mesh_ax,
+                "dim_size": int(size),
+                "mesh_axis_size": int(mesh.shape.get(mesh_ax, 0)),
+                "reason": reason,
+            })
+        parts.append(None)
     return P(*parts)
 
 
@@ -46,26 +70,88 @@ def param_shardings(cfg: ModelConfig, mesh: Mesh):
         abstract, axes)
 
 
+def param_fallbacks(cfg: ModelConfig, mesh) -> list:
+    """Every silent sharding drop across the model's params, as report rows.
+
+    One entry per (param, dim) whose rule-named mesh axis was dropped, with
+    the param's path, shape, and full (replicated) byte size attached.
+    ``mesh`` only needs a ``.shape`` mapping, so production mesh shapes can
+    be audited without 512 placeholder devices.
+    """
+    import numpy as np
+
+    rules = rules_for(cfg)
+    abstract = params_lib.abstract_params(cfg)
+    axes = params_lib.logical_axes(cfg)
+    entries: list = []
+
+    def visit(path, a, ax):
+        drops: list = []
+        spec_for(a.shape, ax, rules, mesh, drops=drops)
+        for d in drops:
+            entries.append({
+                "param": jax.tree_util.keystr(path),
+                "shape": list(a.shape),
+                "bytes": int(np.prod(a.shape)) * a.dtype.itemsize,
+                **d,
+            })
+        return None
+
+    jax.tree_util.tree_map_with_path(visit, abstract, axes)
+    return entries
+
+
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Mesh axes that carry the batch dim: ('pod','data') when pod exists."""
     return tuple(ax for ax in ("pod", "data") if ax in mesh.shape)
 
 
+def batch_partition(mesh: Mesh, batch_size: Optional[int]) -> Tuple[str, ...]:
+    """Largest prefix of ('pod','data') whose device product divides the batch.
+
+    The all-or-nothing predecessor replicated the whole batch whenever the
+    *combined* ('pod','data') count didn't divide it — e.g. batch=16 on a
+    pod=2 x data=16 mesh fell back to fully replicated even though the pod
+    axis alone divides 16. Shrinking from the right instead shards over
+    ('pod',) there; batch_size=None means shapes are unconstrained and the
+    full prefix is used.
+    """
+    ba = batch_axes(mesh)
+    if batch_size is None:
+        return ba
+    while ba:
+        n = 1
+        for ax in ba:
+            n *= mesh.shape[ax]
+        if batch_size % n == 0:
+            return ba
+        ba = ba[:-1]
+    return ()
+
+
+def data_spec(mesh, ndim: int, *, batch_dim: int = 0,
+              seq_dim: Optional[int] = None, seq_axis: Optional[str] = None,
+              batch_size: Optional[int] = None) -> P:
+    """The PartitionSpec behind :func:`data_sharding` (mesh needs only
+    ``.shape``, so rule logic is testable against production mesh shapes)."""
+    parts: list = [None] * ndim
+    ba = batch_partition(mesh, batch_size)
+    if ba:
+        parts[batch_dim] = ba if len(ba) > 1 else ba[0]
+    if seq_dim is not None and seq_axis is not None and seq_axis in mesh.shape:
+        parts[seq_dim] = seq_axis
+    return P(*parts)
+
+
 def data_sharding(mesh: Mesh, ndim: int, *, batch_dim: int = 0,
                   seq_dim: Optional[int] = None, seq_axis: Optional[str] = None,
                   batch_size: Optional[int] = None) -> NamedSharding:
-    """Input sharding: batch over ('pod','data'); optional sequence sharding
-    (long-context decode shards the KV-cache seq dim instead of batch=1)."""
-    parts: list = [None] * ndim
-    ba = batch_axes(mesh)
-    n_batch_devices = 1
-    for ax in ba:
-        n_batch_devices *= mesh.shape[ax]
-    if batch_size is None or batch_size % n_batch_devices == 0:
-        parts[batch_dim] = ba if len(ba) > 1 else (ba[0] if ba else None)
-    if seq_dim is not None and seq_axis is not None and seq_axis in mesh.shape:
-        parts[seq_dim] = seq_axis
-    return NamedSharding(mesh, P(*parts))
+    """Input sharding: batch over the largest divisible prefix of
+    ('pod','data'); optional sequence sharding (long-context decode shards
+    the KV-cache seq dim instead of batch=1)."""
+    return NamedSharding(mesh, data_spec(
+        mesh, ndim, batch_dim=batch_dim, seq_dim=seq_dim, seq_axis=seq_axis,
+        batch_size=batch_size))
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
@@ -89,6 +175,25 @@ _ACTIVE = threading.local()
 def use_mesh(mesh: Mesh):
     prev = getattr(_ACTIVE, "mesh", None)
     _ACTIVE.mesh = mesh
+    try:
+        yield
+    finally:
+        _ACTIVE.mesh = prev
+
+
+@contextlib.contextmanager
+def suspend_mesh():
+    """Hide the active mesh for a scope.
+
+    The mesh-aware kernel dispatch (kernels/ops.py) wraps launches in
+    shard_map when a mesh is registered; code already *inside* a shard_map
+    body (workloads.kmeans_sharded, qr_givens_sharded) runs its division
+    sites under this so the dispatch never tries to nest a second shard_map
+    over the same mesh. Works under tracing: shard_map traces its body
+    synchronously, inside this context's dynamic extent.
+    """
+    prev = getattr(_ACTIVE, "mesh", None)
+    _ACTIVE.mesh = None
     try:
         yield
     finally:

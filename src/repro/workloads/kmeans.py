@@ -34,8 +34,8 @@ import numpy as np
 
 from repro.core import division_modes as dm
 
-__all__ = ["KMeansResult", "kmeans", "lloyd_step", "pairwise_mean_sqdist",
-           "make_blobs"]
+__all__ = ["KMeansResult", "kmeans", "kmeans_sharded", "lloyd_step",
+           "pairwise_mean_sqdist", "make_blobs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +83,42 @@ def _assign_and_inertia(x, c, cfg: dm.DivisionConfig):
     return d2, assign, inertia
 
 
+# Canonical accumulation blocking for the (N, K) x (N, D) centroid sums.
+# Both the single-device and the sharded path reduce the same 8 row-major
+# block partials in the same left-to-right order, so sharding cannot move
+# the centroid sums by more than per-block matmul scheduling noise (the
+# sums are f32; one global einsum vs a psum tree would differ by several
+# ulps at N ~ 10^6 — see docs/numerics.md).
+_SUM_BLOCKS = 8
+
+
+def _block_cluster_sums(onehot, x, n_blocks: int):
+    """(n_blocks, K, D) per-cluster sums over row-major row blocks."""
+    import jax.numpy as jnp
+
+    parts = [jnp.einsum("nk,nd->kd", o, b)
+             for o, b in zip(jnp.split(onehot, n_blocks, axis=0),
+                             jnp.split(x, n_blocks, axis=0))]
+    return jnp.stack(parts)
+
+
+def _ordered_block_sum(stacked):
+    """Left-to-right sum over the leading axis — one fixed reduction order."""
+    out = stacked[0]
+    for i in range(1, stacked.shape[0]):
+        out = out + stacked[i]
+    return out
+
+
+def _cluster_sums(onehot, x):
+    """Per-cluster coordinate sums, (..., K, D), canonical order when 2D."""
+    import jax.numpy as jnp
+
+    if x.ndim == 2 and x.shape[0] % _SUM_BLOCKS == 0:
+        return _ordered_block_sum(_block_cluster_sums(onehot, x, _SUM_BLOCKS))
+    return jnp.einsum("...nk,...nd->...kd", onehot, x)
+
+
 def lloyd_step(x, c, cfg: dm.DivisionConfig = dm.TAYLOR):
     """One Lloyd iteration: assign, update centroids, measure inertia.
 
@@ -96,7 +132,7 @@ def lloyd_step(x, c, cfg: dm.DivisionConfig = dm.TAYLOR):
     d2, assign, inertia = _assign_and_inertia(x, c, cfg)
     onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)        # (..., N, K)
     counts = jnp.sum(onehot, axis=-2)                        # (..., K)
-    sums = jnp.einsum("...nk,...nd->...kd", onehot, x)       # (..., K, D)
+    sums = _cluster_sums(onehot, x)                          # (..., K, D)
     # Empty clusters: divide by max(count, 1) — not by the raw count — so
     # the 0/0 lane never exists even in exact mode, whose d(a/b) = 1/b
     # cotangent would turn into 0 * inf = nan under the where mask below
@@ -145,6 +181,117 @@ def kmeans(x, k: Optional[int] = None, *, cfg: dm.DivisionConfig = dm.TAYLOR,
     # Final assignment/inertia under the converged centroids — evaluation
     # only, no discarded centroid update.
     _, assign, inertia = _assign_and_inertia(x, centroids, cfg)
+    return KMeansResult(centroids=centroids, assignments=assign,
+                        inertia=inertia, inertia_trace=trace)
+
+
+def kmeans_sharded(x, k: Optional[int] = None, *,
+                   cfg: dm.DivisionConfig = dm.TAYLOR, n_iters: int = 10,
+                   init=None, key=None) -> KMeansResult:
+    """Data-parallel Lloyd over the active mesh: production-scale K-Means.
+
+    ``x`` must be (N, D); points shard over the batch axes (the largest
+    divisible prefix of ('pod','data'), see ``rules.batch_partition``) and
+    centroids replicate. Each iteration runs the assignment on resident
+    points only, then ``psum``s the per-cluster sums *and* counts across the
+    mesh **before** the centroid divide — so the division unit consumes
+    globally-reduced operands and empty-cluster masking sees global counts
+    (a locally-empty cluster is not an empty cluster). The per-point
+    assignment distances are elementwise in N, so assignments match the
+    unsharded run bit-for-bit; the centroid sums are reduced tree-wise by
+    ``psum`` rather than in one row-major einsum, which can move the last
+    bit (see docs/numerics.md) — hence the <= 1 int ulp centroid gate in
+    tests/test_sharded_kernels.py.
+
+    Division sites inside the body run under ``rules.suspend_mesh()`` so the
+    mesh-aware kernel dispatch never nests a second shard_map. Falls back to
+    plain :func:`kmeans` when no mesh is active or no batch-axis prefix
+    divides N.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.sharding import rules as shr
+
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"kmeans_sharded wants (N, D) points, got {x.shape}")
+    mesh = shr.active_mesh()
+    axes = shr.batch_partition(mesh, x.shape[0]) if mesh is not None else ()
+    n_shards = 1
+    for ax in axes:
+        n_shards *= mesh.shape[ax]
+    if n_shards <= 1:
+        return kmeans(x, k, cfg=cfg, n_iters=n_iters, init=init, key=key)
+
+    if init is None:
+        if k is None:
+            raise ValueError("pass k or an explicit init")
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+        init = jnp.take(x, idx, axis=0)
+    else:
+        init = jnp.asarray(init, x.dtype)
+        if k is not None and k != init.shape[-2]:
+            raise ValueError(f"k={k} != init.shape[-2]={init.shape[-2]}")
+    kk = init.shape[-2]
+    n_total = jnp.asarray(x.shape[0], x.dtype)
+    # When the canonical _SUM_BLOCKS blocking aligns with the shard layout,
+    # each shard contributes whole blocks and the partials are combined in
+    # the same left-to-right order as the single-device _cluster_sums —
+    # that is what makes the <= 1 ulp centroid gate hold at 10^6 points.
+    blocked = (x.shape[0] % _SUM_BLOCKS == 0
+               and _SUM_BLOCKS % n_shards == 0)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(xl, c0):
+        # xl: (N / n_shards, D) resident points; c0: replicated (K, D).
+        with shr.suspend_mesh():
+            def step(c, _):
+                d2 = pairwise_mean_sqdist(xl, c, cfg)
+                assign = jnp.argmin(d2, axis=-1)
+                onehot = jax.nn.one_hot(assign, kk, dtype=xl.dtype)
+                # Global reduction BEFORE the divide: the unit sees the
+                # whole cluster's sum/count, not a shard's slice of it.
+                # Counts are integer-valued f32 (exact up to 2^24), so the
+                # psum order cannot move them; the sums are reduced in the
+                # canonical block order when the layout allows (an
+                # order-fixed psum: gather the block partials in shard
+                # order, then one left-to-right sum on every device).
+                counts = jax.lax.psum(jnp.sum(onehot, axis=-2), axes)
+                if blocked:
+                    parts = _block_cluster_sums(
+                        onehot, xl, _SUM_BLOCKS // n_shards)
+                    parts = jax.lax.all_gather(parts, axes, axis=0,
+                                               tiled=True)
+                    sums = _ordered_block_sum(parts)
+                else:
+                    sums = jax.lax.psum(
+                        jnp.einsum("nk,nd->kd", onehot, xl), axes)
+                inertia = dm.div(
+                    jax.lax.psum(jnp.sum(jnp.min(d2, axis=-1)), axes),
+                    n_total, cfg)
+                occupied = counts[:, None] > 0
+                new_c = dm.div(sums, jnp.maximum(counts, 1)[:, None], cfg)
+                new_c = jnp.where(occupied, new_c, c)
+                return new_c, inertia
+
+            centroids, trace = jax.lax.scan(step, c0, None, length=n_iters)
+            d2 = pairwise_mean_sqdist(xl, centroids, cfg)
+            assign = jnp.argmin(d2, axis=-1)
+            inertia = dm.div(
+                jax.lax.psum(jnp.sum(jnp.min(d2, axis=-1)), axes),
+                n_total, cfg)
+        return centroids, assign, inertia, trace
+
+    pts = P(axes, None)
+    run = shard_map(
+        body, mesh=mesh, in_specs=(pts, P()),
+        # Everything but the assignments is psum-replicated across the mesh.
+        out_specs=(P(), P(axes), P(), P()), check_rep=False)
+    centroids, assign, inertia, trace = run(x, init)
     return KMeansResult(centroids=centroids, assignments=assign,
                         inertia=inertia, inertia_trace=trace)
 

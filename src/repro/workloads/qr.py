@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.core import division_modes as dm
 
-__all__ = ["givens_coeffs", "qr_givens"]
+__all__ = ["givens_coeffs", "qr_givens", "qr_givens_batched",
+           "qr_givens_sharded"]
 
 
 def givens_coeffs(a, b, cfg: dm.DivisionConfig = dm.TAYLOR,
@@ -122,3 +123,65 @@ def qr_givens(a, cfg: dm.DivisionConfig = dm.TAYLOR, *, via: str = "div"):
 
     qt, r = jax.lax.fori_loop(0, len(jj), body, (qt, r))
     return qt.T, r
+
+
+def qr_givens_batched(a, cfg: dm.DivisionConfig = dm.TAYLOR, *,
+                      via: str = "div"):
+    """QR of a batch of matrices: (..., M, N) -> (Q (..., M, M), R (..., M, N)).
+
+    vmap over the flattened leading dims — the rotation schedule is static,
+    so every batch member shares one trace and the per-rotation divides
+    vectorize across the batch.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.asarray(a)
+    if a.ndim < 2:
+        raise ValueError(f"qr_givens_batched expects (..., M, N), got {a.shape}")
+    if a.ndim == 2:
+        return qr_givens(a, cfg, via=via)
+    lead = a.shape[:-2]
+    a3 = a.reshape((-1,) + a.shape[-2:])
+    q3, r3 = jax.vmap(lambda mat: qr_givens(mat, cfg, via=via))(a3)
+    return (q3.reshape(lead + q3.shape[-2:]),
+            r3.reshape(lead + r3.shape[-2:]))
+
+
+def qr_givens_sharded(a, cfg: dm.DivisionConfig = dm.TAYLOR, *,
+                      via: str = "div"):
+    """Batched Givens QR with the batch dim sharded over the active mesh.
+
+    ``a`` is (B, M, N); the batch shards over the largest divisible prefix of
+    ('pod','data') (``rules.batch_partition``) and each device decomposes its
+    resident matrices with :func:`qr_givens_batched`. The rotations are
+    entirely intra-matrix, so there is nothing to reduce across the mesh —
+    sharded QR is bit-identical to the batched single-device run. Division
+    sites run under ``rules.suspend_mesh()`` (the body is already inside a
+    shard_map). Falls back to :func:`qr_givens_batched` when no mesh is
+    active or no batch-axis prefix divides B.
+    """
+    import jax.numpy as jnp
+    from repro.sharding import rules as shr
+
+    a = jnp.asarray(a)
+    if a.ndim != 3:
+        raise ValueError(f"qr_givens_sharded wants (B, M, N), got {a.shape}")
+    mesh = shr.active_mesh()
+    axes = shr.batch_partition(mesh, a.shape[0]) if mesh is not None else ()
+    n_shards = 1
+    for ax in axes:
+        n_shards *= mesh.shape[ax]
+    if n_shards <= 1:
+        return qr_givens_batched(a, cfg, via=via)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(al):
+        with shr.suspend_mesh():
+            return qr_givens_batched(al, cfg, via=via)
+
+    spec = P(axes, None, None)
+    return shard_map(body, mesh=mesh, in_specs=(spec,),
+                     out_specs=(spec, spec), check_rep=False)(a)

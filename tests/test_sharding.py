@@ -56,6 +56,129 @@ class TestSpecFor:
         assert s == P(None, "data", None, "model")
 
 
+class TestSpecForDrops:
+    """spec_for's silent fallbacks become recorded entries (PR 7 satellite)."""
+
+    def test_drops_recorded_with_reasons(self):
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        rules = {"experts": "data", "embed": "data", "kv_heads": "model",
+                 "seq": "pod"}
+        drops = []
+        s = shr.spec_for((16, 8192, 12, 100),
+                         ("experts", "embed", "kv_heads", "seq"),
+                         rules, FakeMesh, drops=drops)
+        assert s == P("data", None, None, None)
+        reasons = {d["dim"]: d["reason"] for d in drops}
+        assert reasons == {1: "duplicate", 2: "indivisible",
+                           3: "missing-axis"}
+        kv = next(d for d in drops if d["dim"] == 2)
+        assert kv["logical_axis"] == "kv_heads"
+        assert kv["mesh_axis"] == "model"
+        assert kv["dim_size"] == 12 and kv["mesh_axis_size"] == 16
+
+    def test_intended_replication_is_not_a_drop(self):
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        drops = []
+        s = shr.spec_for((4096, 128), ("embed", "head_dim"),
+                         {"embed": None}, FakeMesh, drops=drops)
+        assert s == P(None, None)
+        assert drops == []
+
+    def test_param_fallbacks_names_gqa_kv_replication(self):
+        """GQA kv_heads < model axis: the replicated KV tensors must show up
+        as named entries with their byte sizes, not vanish."""
+        class FakeMesh:
+            shape = {"data": 32, "model": 32}
+
+        cfg = get_config("llama3_8b")       # 8 kv heads < model=32
+        entries = shr.param_fallbacks(cfg, FakeMesh)
+        kv = [e for e in entries if e["reason"] == "indivisible"]
+        assert kv, "expected indivisible drops on the 32-wide model axis"
+        for e in kv:
+            assert e["param"] and e["bytes"] > 0 and len(e["shape"]) >= 2
+            assert e["mesh_axis_size"] == 32
+            assert e["dim_size"] % 32 != 0
+
+
+class TestBatchPartition:
+    """data_sharding's all-or-nothing fallback is fixed: largest divisible
+    prefix of ('pod','data') instead of replicating the whole batch."""
+
+    class PodMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    def test_regression_batch16_pod2_data16(self):
+        # The bug this PR fixes: batch=16 on pod=2 x data=16 used to fall
+        # back to fully replicated because 16 % 32 != 0 — but the pod axis
+        # alone divides 16, so the batch must shard over ('pod',).
+        assert shr.batch_partition(self.PodMesh, 16) == ("pod",)
+        assert shr.data_spec(self.PodMesh, 2, batch_size=16) == P("pod", None)
+
+    def test_full_prefix_when_divisible(self):
+        assert shr.batch_partition(self.PodMesh, 64) == ("pod", "data")
+        assert shr.data_spec(self.PodMesh, 2, batch_size=64) == \
+            P(("pod", "data"), None)
+
+    def test_nothing_divides_replicates(self):
+        assert shr.batch_partition(self.PodMesh, 7) == ()
+        assert shr.data_spec(self.PodMesh, 2, batch_size=7) == P(None, None)
+
+    def test_none_batch_uses_full_prefix(self):
+        assert shr.batch_partition(self.PodMesh, None) == ("pod", "data")
+
+    def test_single_pod_mesh(self):
+        class M:
+            shape = {"data": 16, "model": 16}
+
+        assert shr.batch_partition(M, 48) == ("data",)
+        assert shr.batch_partition(M, 10) == ()
+
+
+class TestMakeHostMesh:
+    """make_host_mesh raises ValueError (not a -O-stripped assert)."""
+
+    def test_model_exceeds_device_count(self):
+        from repro.launch.mesh import make_host_mesh
+
+        n = jax.device_count()
+        with pytest.raises(ValueError, match=f"exceeds the {n} available"):
+            make_host_mesh(model=n + 1)
+
+    def test_error_names_force_flag(self):
+        from repro.launch.mesh import make_host_mesh
+
+        with pytest.raises(ValueError,
+                           match="xla_force_host_platform_device_count"):
+            make_host_mesh(model=jax.device_count() + 1)
+
+    def test_model_below_one(self):
+        from repro.launch.mesh import make_host_mesh
+
+        with pytest.raises(ValueError, match="must be >= 1"):
+            make_host_mesh(model=0)
+
+    def test_indivisible_names_device_count(self):
+        from repro.launch.mesh import make_host_mesh
+
+        n = jax.device_count()
+        if n < 3:
+            pytest.skip("needs >= 3 devices for an indivisible case")
+        model = next(m for m in range(2, n) if n % m)
+        with pytest.raises(ValueError, match=f"device count {n}"):
+            make_host_mesh(model=model)
+
+    def test_valid_mesh_still_builds(self):
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(model=1)
+        assert mesh.shape["model"] == 1
+        assert mesh.shape["data"] == jax.device_count()
+
+
 def test_param_shardings_all_valid():
     """Every param's spec must divide its dims on the production mesh shape."""
     class FakeMesh:
